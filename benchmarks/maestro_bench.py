@@ -1,0 +1,76 @@
+"""Maestro benchmarks: first-response time and materialized size across
+choices and input sizes (paper Figs 4.21-4.24)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.materialization import enumerate_choices
+from repro.core.regions import Op, Workflow
+from repro.core.scheduler import (CostModel, choose, first_response_time,
+                                  materialized_bytes)
+
+
+def w1(card: float) -> Workflow:
+    """Fig 4.20 W1-like: scan -> replicate -> {filter->join.probe,
+    join.build} -> ml -> sink."""
+    wf = Workflow()
+    for op in [Op("scan", "scan", 1.0, 1.0, card),
+               Op("rep", "replicate", 0.1, 2.0),
+               Op("filter", "filter", 1.0, 0.4),
+               Op("join", "join", 2.0, 0.5),
+               Op("ml", "ml", 6.0, 1.0),
+               Op("sink", "sink", 0.1, 1.0)]:
+        wf.add_op(op)
+    wf.add_edge("scan", "rep")
+    wf.add_edge("rep", "filter")
+    wf.add_edge("rep", "join", blocking=True, port="build")
+    wf.add_edge("filter", "join", port="probe")
+    wf.add_edge("join", "ml").add_edge("ml", "sink")
+    return wf
+
+
+def w2(card: float) -> Workflow:
+    """Fig 4.20 W2-like: two joins fed by one scan through replicates."""
+    wf = Workflow()
+    for op in [Op("scan", "scan", 1.0, 1.0, card),
+               Op("d1", "replicate", 0.1, 2.0),
+               Op("f1", "filter", 1.0, 0.5),
+               Op("j1", "join", 2.0, 0.6),
+               Op("d2", "replicate", 0.1, 2.0),
+               Op("m1", "ml", 5.0, 1.0),
+               Op("j2", "join", 2.0, 0.5),
+               Op("sink", "sink", 0.1, 1.0)]:
+        wf.add_op(op)
+    wf.add_edge("scan", "d1")
+    wf.add_edge("d1", "f1")
+    wf.add_edge("d1", "j1", blocking=True, port="build")
+    wf.add_edge("f1", "j1", port="probe")
+    wf.add_edge("j1", "d2")
+    wf.add_edge("d2", "m1")
+    wf.add_edge("d2", "j2", blocking=True, port="build")
+    wf.add_edge("m1", "j2", port="probe")
+    wf.add_edge("j2", "sink")
+    return wf
+
+
+def run():
+    rows = []
+    cm = CostModel(parallelism=4.0)
+    for name, mk in (("W1", w1), ("W2", w2)):
+        for card in (1e4, 1e5, 1e6):
+            wf = mk(card)
+            t0 = time.perf_counter()
+            best, info = choose(wf, cm)
+            us = (time.perf_counter() - t0) * 1e6
+            frts = [f for f, b, c in info["all"]]
+            rows.append((f"fig4.21_frt/{name}_card{card:.0e}", us,
+                         f"best_frt={info['frt']:.0f};"
+                         f"worst_frt={max(frts):.0f};"
+                         f"choices={len(frts)};"
+                         f"speedup={max(frts) / max(info['frt'], 1e-9):.2f}x"))
+            sizes = [b for f, b, c in info["all"]]
+            rows.append((f"fig4.23_matsize/{name}_card{card:.0e}", us,
+                         f"chosen_bytes={info['bytes']:.2e};"
+                         f"min_bytes={min(sizes):.2e};"
+                         f"max_bytes={max(sizes):.2e}"))
+    return rows

@@ -1,0 +1,272 @@
+"""Benchmarks reproducing the Reshape chapter's figures on the Tier-A
+pipelined simulator (paper §3.7).  Each returns CSV rows
+(name, us_per_call, derived) where `derived` carries the figure's metric."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.adaptive import TauAdjuster
+from repro.core.skew import SkewParams
+from repro.core.strategies import (FlowJoinStrategy, FluxStrategy,
+                                   NoMitigation, ReshapeStrategy)
+from repro.core.transfer import PartitionLogic
+from repro.core.worker import PipelinedSim
+from repro.data.synthetic import tweets_like_rates
+
+import math
+
+KEYS = list(range(50))
+RATES = tweets_like_rates(50)
+EMIT_TICKS = 300          # finite input, as in the paper's bounded datasets
+
+
+def _noisy(rates, t, amp=0.4):
+    """Deterministic pseudo-noise so the estimator sees real variance."""
+    return {k: r * (1.0 + amp * math.sin(0.7 * t + k)) for k, r in
+            rates.items()}
+
+
+def _mk(proc=5.0, rates=None, noise=0.0, emit_ticks=EMIT_TICKS, **kw):
+    base = rates or RATES
+
+    def f(t):
+        if t >= emit_ticks:
+            return {}
+        return _noisy(base, t, noise) if noise else base
+    return PipelinedSim(50, f, proc_rate=proc,
+                        logic=PartitionLogic.modulo(KEYS, 50), **kw)
+
+
+def _pair_lb(sim, skewed=6):
+    """LB between the skewed worker and ITS helper (workers sharing key 6),
+    falling back to the least-loaded worker when unmitigated (paper §3.7.4)."""
+    arr = sim.arrived
+    sharers = [w for w, _ in sim.logic.assignment[skewed] if w != skewed]
+    if sharers:
+        other = max(arr[w] for w in sharers)
+    else:
+        other = min(a for i, a in enumerate(arr) if i != skewed)
+    return min(arr[skewed], other) / max(arr[skewed], other, 1.0)
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def bench_result_ratio():
+    """Fig 3.16/3.17: |observed - actual| CA:AZ ratio over time."""
+    rows = []
+    true_ratio = RATES[6] / RATES[4]
+    for name, strat in [("none", NoMitigation()),
+                        ("flux", FluxStrategy(SkewParams(eta=20, tau=20))),
+                        ("flowjoin", FlowJoinStrategy()),
+                        ("reshape", ReshapeStrategy(SkewParams(eta=20,
+                                                               tau=20)))]:
+        sim = _mk()
+        t_hit = [None]
+
+        def obs(s):
+            r = s.processed_key[6] / max(s.processed_key[4], 1.0)
+            if t_hit[0] is None and abs(r - true_ratio) / true_ratio < 0.25:
+                t_hit[0] = s.tick_no
+        _, us = _timed(lambda: sim.run(1800, strat, 5, observer=obs))
+        final = sim.processed_key[6] / max(sim.processed_key[4], 1.0)
+        rows.append((f"fig3.16_result_ratio/{name}", us,
+                     f"ticks_to_representative={t_hit[0]};"
+                     f"final_ratio={final:.2f};true={true_ratio:.2f}"))
+    return rows
+
+
+def bench_first_phase():
+    """Fig 3.18/3.19: the first phase shows MORE representative results
+    earlier — compare the observed/true ratio mid-stream (at emission end)
+    and the time to reach the representative band."""
+    rows = []
+    true_ratio = RATES[6] / RATES[4]
+    for name, fp in [("two_phase", True), ("second_only", False)]:
+        sim = _mk()
+        t_hit = [None]
+        at_300 = [0.0]
+
+        def obs(s):
+            r = s.processed_key[6] / max(s.processed_key[4], 1.0)
+            if s.tick_no == EMIT_TICKS:
+                at_300[0] = r
+            if t_hit[0] is None and abs(r - true_ratio) / true_ratio < 0.25:
+                t_hit[0] = s.tick_no
+        _, us = _timed(lambda: sim.run(
+            1800, ReshapeStrategy(SkewParams(eta=20, tau=20), first_phase=fp),
+            5, observer=obs))
+        rows.append((f"fig3.18_first_phase/{name}", us,
+                     f"ratio_at_emission_end={at_300[0]:.2f} (true "
+                     f"{true_ratio:.2f});ticks_to_representative={t_hit[0]}"))
+    return rows
+
+
+def bench_heavy_hitter():
+    """Fig 3.20: average load-balancing ratio per strategy."""
+    rows = []
+    for name, strat in [("flux", FluxStrategy(SkewParams(eta=20, tau=20))),
+                        ("flowjoin_d2", FlowJoinStrategy(detect_window=2)),
+                        ("flowjoin_d8", FlowJoinStrategy(detect_window=8)),
+                        ("reshape", ReshapeStrategy(SkewParams(eta=20,
+                                                               tau=20)))]:
+        lbs = []
+        sim = _mk()
+
+        def obs(s):
+            if s.tick_no % 10 == 0 and s.tick_no > 20:
+                lbs.append(_pair_lb(s))
+        _, us = _timed(lambda: sim.run(400, strat, 5, observer=obs))
+        rows.append((f"fig3.20_heavy_hitter/{name}", us,
+                     f"avg_lb_ratio={np.mean(lbs):.3f}"))
+    return rows
+
+
+def bench_control_delay():
+    """Fig 3.21: LB ratio vs control-message delay."""
+    rows = []
+    for delay in (0, 5, 15, 30):
+        sim = _mk(control_delay=delay)
+        lbs = []
+
+        def obs(s):
+            if s.tick_no % 10 == 0 and s.tick_no > 20:
+                lbs.append(_pair_lb(s))
+        _, us = _timed(lambda: sim.run(
+            400, ReshapeStrategy(SkewParams(eta=20, tau=20)), 5,
+            observer=obs))
+        rows.append((f"fig3.21_control_delay/{delay}t", us,
+                     f"avg_lb_ratio={np.mean(lbs):.3f}"))
+    return rows
+
+
+def bench_adaptive_tau():
+    """Fig 3.22: avg LB per mitigation iteration, fixed vs dynamic tau."""
+    rows = []
+    for tau in (2, 20, 400, 2000):
+        for dyn in (False, True):
+            adj = TauAdjuster(eps_l=12.0, eps_u=25.0, tau=tau,
+                              increase_by=30) if dyn else None
+            strat = ReshapeStrategy(SkewParams(eta=20, tau=tau),
+                                    adaptive_tau=adj)
+            sim = _mk(noise=0.2, emit_ticks=280)
+            lbs = []
+
+            def obs(s):
+                if s.tick_no % 10 == 0 and s.tick_no > 20:
+                    lbs.append(_pair_lb(s))
+            _, us = _timed(lambda: sim.run(400, strat, 5, observer=obs))
+            rows.append((f"fig3.22_adaptive_tau/tau{tau}_"
+                         f"{'dyn' if dyn else 'fixed'}", us,
+                         f"avg_lb={np.mean(lbs):.3f};"
+                         f"migrations={strat.migrations};"
+                         f"refreshes={strat.iterations}"))
+    return rows
+
+
+def bench_skew_levels():
+    """Fig 3.23: LB under moderate vs high skew."""
+    rows = []
+    for name, hot in [("moderate", 6.0), ("high", 26.0)]:
+        rates = {k: 1.0 for k in KEYS}
+        rates[6] = hot
+        sim = _mk(rates=rates)
+        lbs = []
+
+        def obs(s):
+            if s.tick_no % 10 == 0 and s.tick_no > 20:
+                lbs.append(_pair_lb(s))
+        _, us = _timed(lambda: sim.run(
+            400, ReshapeStrategy(SkewParams(eta=10, tau=10)), 5,
+            observer=obs))
+        rows.append((f"fig3.23_skew_levels/{name}", us,
+                     f"avg_lb_ratio={np.mean(lbs):.3f}"))
+    return rows
+
+
+def bench_distribution_shift():
+    """Fig 3.24: workload ratio tracking across a mid-stream shift."""
+    rates_a = {k: 1.0 for k in KEYS}
+    rates_a[0] = 20.0
+    rates_b = {k: 1.0 for k in KEYS}
+    rates_b[0] = 8.0
+    rates_b[1] = 13.0
+    rows = []
+    for name, strat in [("flux", FluxStrategy(SkewParams(eta=15, tau=15))),
+                        ("flowjoin", FlowJoinStrategy()),
+                        ("reshape", ReshapeStrategy(SkewParams(eta=15,
+                                                               tau=15)))]:
+        sim = PipelinedSim(50, lambda t: rates_a if t < 150 else rates_b,
+                           proc_rate=4.0,
+                           logic=PartitionLogic.modulo(KEYS, 50))
+        _, us = _timed(lambda: sim.run(400, strat, 5))
+        spread = float(np.std(sim.arrived))
+        rows.append((f"fig3.24_dist_shift/{name}", us,
+                     f"arrival_spread={spread:.1f}"))
+    return rows
+
+
+def bench_multi_helper():
+    """Fig 3.26: load reduction vs helper count w/ migration cost."""
+    from repro.core.helpers import choose_helpers, lr_max
+    rows = []
+    for n_max in (1, 2, 4, 8, 16, 24):
+        cands = [(i + 1, 0.02) for i in range(n_max)]
+        t0 = time.perf_counter()
+        chosen = choose_helpers(0.4, cands, 27e6, 27e6, 65000,
+                                lambda n: 15 + 3.0 * n)
+        us = (time.perf_counter() - t0) * 1e6
+        fracs = [0.02] * len(chosen)
+        lr_sel = lr_max(0.4, fracs, 27e6)
+        rows.append((f"fig3.26_multi_helper/max{n_max}", us,
+                     f"chosen={len(chosen)};lr_max={lr_sel:.3e}"))
+    return rows
+
+
+def bench_sort_reshape():
+    """Table 3.2: Reshape on range-sort — LB + sortedness invariant."""
+    from repro.core.state_migration import (RangeSortWorker,
+                                            merged_sorted_output)
+    rows = []
+    rng = np.random.default_rng(0)
+    n = 20_000
+    # skewed totalprice-like distribution (lognormal)
+    values = (rng.lognormal(3.0, 0.6, n) * 10).astype(int)
+    t0 = time.perf_counter()
+    workers = [RangeSortWorker(i) for i in range(4)]
+    bounds = [30, 60, 120]                      # skewed ranges
+    scopes = ["r0", "r1", "r2", "r3"]
+    owner = {s: workers[i] for i, s in enumerate(scopes)}
+    counts = [0, 0, 0, 0]
+    for i, v in enumerate(values):
+        si = sum(v > b for b in bounds)
+        w = workers[si]
+        # SBR: hot range r2 split 50/50 with helper worker 0
+        if si == 2 and i % 2 == 0:
+            w = workers[0]
+        counts[w.wid] += 1
+        w.process(scopes[si], int(v))
+    for w in workers:
+        w.on_end_marker(0, 1, owner)
+    out = merged_sorted_output(workers, scopes)
+    us = (time.perf_counter() - t0) * 1e6
+    ok = out == sorted(values.tolist())
+    lb = min(counts[0], counts[2]) / max(counts[0], counts[2])
+    rows.append(("tbl3.2_sort_reshape", us,
+                 f"sorted={ok};lb_ratio={lb:.2f};n={n}"))
+    return rows
+
+
+def run():
+    rows = []
+    for fn in (bench_result_ratio, bench_first_phase, bench_heavy_hitter,
+               bench_control_delay, bench_adaptive_tau, bench_skew_levels,
+               bench_distribution_shift, bench_multi_helper,
+               bench_sort_reshape):
+        rows.extend(fn())
+    return rows

@@ -1,0 +1,41 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV.  Sub-suites: paper_sim (Reshape Ch.3 figures on the Tier-A simulator),
+# runtime_bench (Amber Ch.2 + live-MoE on the real JAX runtime),
+# maestro_bench (Ch.4 FRT/materialization).
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all",
+                    choices=["all", "sim", "runtime", "maestro"])
+    args = ap.parse_args()
+
+    sys.path.insert(0, "src")
+    suites = []
+    if args.suite in ("all", "sim"):
+        from benchmarks import paper_sim
+        suites.append(("sim", paper_sim.run))
+    if args.suite in ("all", "runtime"):
+        from benchmarks import runtime_bench
+        suites.append(("runtime", runtime_bench.run))
+    if args.suite in ("all", "maestro"):
+        from benchmarks import maestro_bench
+        suites.append(("maestro", maestro_bench.run))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for sname, fn in suites:
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{sname}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

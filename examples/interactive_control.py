@@ -1,0 +1,80 @@
+"""Amber interactivity demo: pause a running training job, inspect state
+WHILE paused, hot-update the learning rate, set a breakpoint, resume —
+then crash it and recover bit-exact from checkpoint + control-replay log.
+
+  PYTHONPATH=src python examples/interactive_control.py
+"""
+import shutil
+import threading
+import time
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import messages as M
+from repro.core.breakpoints import GlobalCountBreakpoint
+from repro.data.synthetic import TokenStream
+from repro.runtime.loop import LoopConfig, TrainLoop
+from repro.runtime.train import TrainHyper
+
+CKPT = "/tmp/repro_interactive_ckpt"
+shutil.rmtree(CKPT, ignore_errors=True)
+
+cfg = get_arch("olmoe-1b-7b-smoke")
+stream = TokenStream(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=1)
+loop = TrainLoop(cfg, stream, TrainHyper(),
+                 LoopConfig(microbatches=2, ckpt_every=4, ckpt_dir=CKPT))
+ctl = loop.controller
+
+
+def user_session():
+    time.sleep(2.0)
+    print("\n[user] >> pause")
+    t0 = time.monotonic()
+    r = ctl.send(M.pause()).wait(60)
+    print(f"[user] paused at (step, microbatch)={r['paused_at']} "
+          f"in {(time.monotonic() - t0) * 1e3:.0f} ms")
+    info = ctl.send(M.inspect()).wait(60)     # responsive WHILE paused
+    print(f"[user] inspect while paused: step={info['step']} "
+          f"loss_tail={[round(h['loss'], 3) for h in info['history_tail']]}")
+    print("[user] >> update lr_scale=0.3  (hot reconfiguration)")
+    ctl.send(M.update(lr_scale=0.3)).wait(60)
+    print("[user] >> set breakpoint: pause after 1,000 more tokens")
+    ctl.send(M.set_breakpoint(GlobalCountBreakpoint(
+        "token-budget", "tokens", target=1000))).wait(60)
+    print("[user] >> resume")
+    ctl.send(M.resume()).wait(60)
+    # keep watching: when the token-budget breakpoint pauses the run,
+    # resume it so training finishes (timing-robust — the breakpoint may
+    # fire at any step depending on machine speed)
+    while not done.is_set():
+        if loop.hit_breakpoints and ctl.paused:
+            print("[user] breakpoint hit -> resume to finish")
+            ctl.send(M.resume()).wait(60)
+            return
+        time.sleep(0.25)
+
+
+done = threading.Event()
+th = threading.Thread(target=user_session)
+th.start()
+hist = loop.run(16)
+done.set()
+th.join()
+print(f"\nran {len(hist)} steps; lr_scale now {loop.lc.lr_scale}; "
+      f"breakpoints hit: {loop.hit_breakpoints}")
+print(f"control log: {[(r.kind, r.step, r.microbatch) for r in ctl.log]}")
+
+# ---- crash & recover ------------------------------------------------------
+print("\nsimulating crash; recovering from checkpoint + control-replay log…")
+stream2 = TokenStream(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=1)
+rec = TrainLoop.recover(cfg, stream2, TrainHyper(),
+                        LoopConfig(microbatches=2, ckpt_every=4,
+                                   ckpt_dir=CKPT))
+print(f"recovered at step {int(rec.state['step'])}; replaying "
+      f"{len(rec.controller._replay)} logged control messages…")
+rec.run(16 - int(rec.state["step"]))
+match = all(np.allclose(np.asarray(a), np.asarray(b))
+            for a, b in zip(*(map(lambda s: __import__('jax').tree.leaves(
+                s['params']), (loop.state, rec.state)))))
+print(f"post-recovery params identical to uninterrupted run: {match}")

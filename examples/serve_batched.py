@@ -1,0 +1,44 @@
+"""Batched serving demo: prefill + decode with KV/SSM caches across three
+architecture families (attention / sliding-window / recurrent), plus the
+Maestro view of serving: prefill is the blocking 'build' region, decode the
+pipelined 'probe' region.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get_arch
+from repro.core.regions import Op, Workflow, regions, schedule
+from repro.models import lm
+from repro.runtime.serve import BatchedServer
+
+rng = np.random.default_rng(0)
+
+for arch in ("yi-34b-smoke", "gemma3-1b-smoke", "rwkv6-1.6b-smoke"):
+    cfg = get_arch(arch)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    srv = BatchedServer(cfg, params, max_len=64)
+    prompts = rng.integers(1, cfg.vocab, (4, 12)).astype(np.int32)
+    t0 = time.time()
+    out = srv.generate(prompts, max_new=12, temperature=0.8, seed=7)
+    dt = time.time() - t0
+    print(f"{arch:24s} batch=4 prefill=12 decode=12 "
+          f"-> {out.shape} in {dt:.2f}s "
+          f"({4 * 12 / dt:.1f} tok/s decode)")
+
+# Maestro's region view of a serving pipeline: the prefill (build) must
+# complete before decode (probe) streams — same machinery as Ch.4.
+wf = Workflow()
+for op in [Op("requests", "scan", 1.0, 1.0, 100),
+           Op("prefill", "join", 5.0, 1.0),
+           Op("decode", "op", 1.0, 16.0),
+           Op("stream_out", "sink", 0.1, 1.0)]:
+    wf.add_op(op)
+wf.add_edge("requests", "prefill", blocking=True, port="build")
+wf.add_edge("prefill", "decode")
+wf.add_edge("decode", "stream_out")
+print("\nserving regions (Maestro):",
+      [sorted(r) for r in schedule(wf)])

@@ -1,0 +1,95 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+dryrun_results.json (+ perf variant jsons).  Narrative sections live in
+EXPERIMENTS.md directly; this script rewrites only the generated block
+between the AUTOGEN markers."""
+import json
+import sys
+
+BEGIN = "<!-- AUTOGEN:TABLES BEGIN -->"
+END = "<!-- AUTOGEN:TABLES END -->"
+
+
+def table(results):
+    out = []
+    out.append("### §Dry-run — every (arch × shape) × mesh cell\n")
+    n_pass = sum(1 for r in results if r.get("ok"))
+    n_skip = sum(1 for r in results if r.get("ok") is None)
+    n_fail = sum(1 for r in results if r.get("ok") is False)
+    out.append(f"**{n_pass} compiled, {n_fail} failed, {n_skip} skipped** "
+               "(skips = long_500k on pure full-attention archs, per "
+               "assignment; reasons recorded per cell).  "
+               "`.lower().compile()` succeeded for every applicable cell on "
+               "both the single-pod 16×16 (256-chip) and multi-pod 2×16×16 "
+               "(512-chip) meshes.  Baselines below use remat=full, "
+               "layout=tp (Megatron-style TP over `model` + FSDP over "
+               "`data`/`pod`).\n")
+    out.append("| arch | shape | mesh | compile s | mem GB/dev | argbytes "
+               "GB | HLO coll GB/dev* | cost_analysis flops |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in results:
+        if r.get("ok") is None:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                       f"| — | — | SKIP: {r['skip_reason'][:60]}… |")
+            continue
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                       f"| FAIL | | | | {r.get('error', '')[:60]} |")
+            continue
+        coll = sum(v for k, v in r["collectives"].items()
+                   if not k.startswith("_"))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compile_s']} | {r['memory']['total_per_device_gb']} "
+            f"| {r['memory']['argument_bytes'] / 2**30:.2f} "
+            f"| {coll / 2**30:.2f} | {r['cost_analysis']['flops']:.2e} |")
+    out.append("\n\\* HLO-text parse of collective result shapes with a flat "
+               "scan-trip multiplier (num_layers); nested microbatch loops "
+               "make this a lower bound — see §Roofline notes.\n")
+
+    out.append("### §Roofline — three terms per cell (single-pod baseline)\n")
+    out.append("Terms from the analytic model (ring-collective convention; "
+               "DESIGN.md §3 explains why `cost_analysis` cannot be used "
+               "directly for scan programs).  Hardware: 197 TFLOP/s bf16, "
+               "819 GB/s HBM, 50 GB/s/link ICI per chip.\n")
+    out.append("| arch | shape | compute s | memory s | collective s "
+               "(analytic; HLO raw) | bottleneck | MODEL_FLOPS | MODEL/HLO | "
+               "roofline frac | what would move the dominant term |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    moves = {
+        "compute": "less remat recompute (dots policy where it fits), lower MoE capacity waste via Reshape",
+        "memory": "fp8 KV cache + weight-stationary 2-D decode sharding (see §Perf C)",
+        "collective": "grad compression on the DP sync; overlap AG with compute",
+    }
+    from repro.launch.mesh import ICI_BW, PEAK_FLOPS_BF16
+    for r in results:
+        if not r.get("ok") or r["mesh"] != "16x16":
+            continue
+        rr = r["roofline"]
+        # primary term: the analytic model (stated ring-collective
+        # convention); raw HLO-text bytes (loop bodies counted once — a
+        # lower bound) are shown alongside as the compiled observable.
+        hlo_gb = rr.get("hlo_collective_bytes", 0) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rr['compute_s']:.3e} "
+            f"| {rr['memory_s']:.3e} | {rr['collective_s']:.3e} "
+            f"(HLO raw {hlo_gb:.1f} GB) "
+            f"| **{rr['dominant']}** | {rr['model_flops']:.2e} "
+            f"| {rr['usefulness']:.2f} | {rr['roofline_fraction']:.1%} "
+            f"| {moves[rr['dominant']]} |")
+    out.append("")
+    return "\n".join(out)
+
+
+def main():
+    results = json.load(open("dryrun_results.json"))
+    block = table(results)
+    src = open("EXPERIMENTS.md").read()
+    pre, rest = src.split(BEGIN)
+    _, post = rest.split(END)
+    open("EXPERIMENTS.md", "w").write(
+        pre + BEGIN + "\n" + block + "\n" + END + post)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""HLO-text analysis: collective-op byte accounting.
+
+``lowered.as_text()`` of an SPMD program contains every collective op with
+its operand shapes.  Collectives inside ``while`` bodies (scan-over-layers)
+appear ONCE in the text, so we report both the raw text sum and a
+trip-count-corrected sum: computations reachable from a while body are
+multiplied by the scan trip count, which the caller knows from the config
+(all our scans are over layer stacks)."""
+from __future__ import annotations
+
+import re
+from collections import Counter, defaultdict
+from typing import Dict, Optional, Tuple
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+                "u16": 2}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+
+
+def _body_depths(hlo_text: str) -> Dict[str, int]:
+    """Nesting depth of every while-body computation (1 = outermost loop).
+    Built from the body=%X references: a body referenced from inside another
+    body is one level deeper."""
+    # computation -> list of bodies it invokes
+    children: Dict[str, list] = defaultdict(list)
+    current = ""
+    for line in hlo_text.splitlines():
+        if line.startswith("%") and "(" in line:
+            current = line.strip().split(" ")[0].lstrip("%")
+        elif line.startswith("ENTRY"):
+            current = "__entry__"
+        for b in _BODY_RE.findall(line):
+            children[current].append(b)
+    depths: Dict[str, int] = {}
+
+    def visit(comp: str, depth: int):
+        for b in children.get(comp, ()):
+            if depths.get(b, 0) < depth:
+                depths[b] = depth
+                visit(b, depth + 1)
+    visit("__entry__", 1)
+    # bodies referenced from non-entry, non-body computations (e.g. called
+    # fusions) — treat their top-level whiles as depth 1
+    for comp in list(children):
+        if comp not in depths and comp != "__entry__":
+            if comp not in depths:
+                for b in children[comp]:
+                    if b not in depths:
+                        depths[b] = depths.get(comp, 0) + 1
+                        visit(b, depths[b] + 1)
+    return depths
+
+
+def collective_bytes(hlo_text: str,
+                     while_multiplier=1.0) -> Dict[str, float]:
+    """Sum operand bytes per collective kind, with nesting-aware loop
+    multipliers.  ``while_multiplier`` may be a scalar (applied to every
+    loop level, legacy) or a list of per-depth trip counts (e.g. [mb, L]
+    for a microbatch scan containing a layer scan): an op at depth d gets
+    the product of the first d trip counts (deeper levels reuse the last).
+    """
+    if isinstance(while_multiplier, (int, float)):
+        trips = [float(while_multiplier)]
+    else:
+        trips = [float(x) for x in while_multiplier] or [1.0]
+    depths = _body_depths(hlo_text)
+
+    def mult_for(comp: str) -> float:
+        # multiply only the loop levels whose trip counts the caller knows
+        # (deeper unknown loops — e.g. attention kv-chunk scans — count once)
+        d = depths.get(comp.lstrip("%"), 0)
+        m = 1.0
+        for i in range(min(d, len(trips))):
+            m *= trips[i]
+        return m
+
+    bodies = set(depths)
+    out: Dict[str, float] = defaultdict(float)
+    counts: Counter = Counter()
+    current_comp = ""
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # computation headers start at column 0; instruction lines are
+        # indented (their shape layouts also contain '{', so indentation is
+        # the only reliable discriminator)
+        if line.startswith("%") and "(" in stripped:
+            current_comp = stripped.split(" ")[0]
+        elif line.startswith("ENTRY") or (stripped.startswith("ENTRY")
+                                          and not line.startswith(" ")):
+            current_comp = stripped.split(" ")[0]
+        current_in_body = current_comp.lstrip("%") in bodies
+        for kind in COLLECTIVES:
+            token = f" {kind}(" if f" {kind}(" in line else (
+                f"{kind}(" if f"= {kind}" in line or f"{kind}-start(" in line
+                else None)
+            if (f" {kind}(" in line or f"{kind}-start(" in line or
+                    re.search(rf"= \S*\s*{kind}", line)):
+                # operand bytes ~ the op's RESULT shape, which sits between
+                # '=' and the op name:  %x = f32[a,b]{...} all-reduce(...)
+                rhs = line.split("=", 1)[1] if "=" in line else line
+                head = rhs.split(kind, 1)[0]
+                b = _shape_bytes(head)
+                if b == 0:
+                    b = _shape_bytes(rhs)
+                mult = mult_for(current_comp) if (
+                    current_in_body or _in_loop(current_comp, line)) else 1.0
+                out[kind] += b * mult
+                counts[kind] += 1
+                break
+    out["_ops"] = dict(counts)  # type: ignore
+    return dict(out)
+
+
+def _in_loop(comp_name: str, line: str) -> bool:
+    lowered = comp_name.lower()
+    return any(k in lowered for k in ("while", "body", "scan", "loop"))
+
+
+def total_collective_bytes(hlo_text: str, while_multiplier=1.0) -> float:
+    d = collective_bytes(hlo_text, while_multiplier)
+    return float(sum(v for k, v in d.items() if not k.startswith("_")))

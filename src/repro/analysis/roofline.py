@@ -1,0 +1,90 @@
+"""Three-term roofline per (arch x shape x mesh).
+
+    compute    = FLOPs / (chips * 197e12)
+    memory     = bytes / (chips * 819e9)
+    collective = collective_bytes / (chips * 50e9)
+
+FLOPs/bytes come from the analytic model (``analysis.flops``), collective
+bytes from both the analytic model and the HLO-text parse (trip-count
+corrected).  The dominant term is the bottleneck the §Perf loop iterates on;
+roofline fraction = compute_term / max(all terms) (how close the cell runs
+to its compute roof if perfectly overlapped)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from repro.analysis import flops as F
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    hlo_collective_bytes: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def usefulness(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roof achieved assuming perfect overlap:
+        T_step = max(terms); fraction = useful-compute-time / T_step."""
+        t = max(self.compute_s, self.memory_s, self.collective_s)
+        useful = self.model_flops / (self.chips * PEAK_FLOPS_BF16)
+        return useful / max(t, 1e-30)
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.compute_s:.3e} | "
+                f"{self.memory_s:.3e} | {self.collective_s:.3e} | "
+                f"{self.dominant} | {self.model_flops:.3e} | "
+                f"{self.usefulness:.2f} | {self.roofline_fraction:.2%} |")
+
+
+def analyze(cfg: ArchConfig, shape: ShapeCfg, mesh_shape: Dict[str, int],
+            remat: str = "none", fsdp: bool = True,
+            hlo_text: Optional[str] = None, layout: str = "tp",
+            kv_bytes: int = 2, seq_shard_decode: bool = False) -> Roofline:
+    chips = 1
+    for v in mesh_shape.values():
+        chips *= v
+    m = mesh_shape.get("model", 1)
+    fc = F.step_flops(cfg, shape, remat)
+    bytes_dev = F.step_bytes_per_device(cfg, shape, chips, m, remat,
+                                        kv_bytes, seq_shard_decode)
+    coll_dev = F.collective_bytes_per_device(cfg, shape, mesh_shape, fsdp,
+                                             layout)
+    hlo_coll = 0.0
+    if hlo_text is not None:
+        from repro.analysis.hlo import total_collective_bytes
+        hlo_coll = total_collective_bytes(hlo_text, cfg.num_layers)
+    return Roofline(
+        arch=cfg.name, shape=shape.name, chips=chips,
+        compute_s=fc.hlo_flops / (chips * PEAK_FLOPS_BF16),
+        memory_s=bytes_dev / HBM_BW,
+        collective_s=coll_dev / ICI_BW,
+        model_flops=fc.model_flops,
+        hlo_flops=fc.hlo_flops,
+        hlo_collective_bytes=hlo_coll,
+    )
+
+
+HEADER = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+          "bottleneck | MODEL_FLOPS | useful | roofline frac |\n"
+          "|---|---|---|---|---|---|---|---|---|")

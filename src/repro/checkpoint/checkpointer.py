@@ -1,0 +1,72 @@
+"""Checkpointing substrate: msgpack+raw-numpy pytree snapshots with atomic
+rename, retention, and the Amber control-replay log (paper §2.6.2) —
+recovery = restore + deterministic replay of logged control messages."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pickle
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.messages import LogRecord
+
+
+def _to_numpy_tree(tree):
+    return jax.tree.map(lambda x: np.asarray(x), tree)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.pkl")
+
+    def save(self, step: int, state: Any,
+             control_log: Optional[List[LogRecord]] = None,
+             extra: Optional[Dict] = None) -> str:
+        payload = {
+            "step": step,
+            "state": _to_numpy_tree(state),
+            "control_log": [dataclasses.asdict(r) for r in control_log or []],
+            "extra": extra or {},
+        }
+        path = self._path(step)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            pickle.dump(payload, f, protocol=4)
+        os.replace(tmp, path)              # atomic publish
+        self._gc()
+        return path
+
+    def _gc(self):
+        ckpts = sorted(self.list_steps())
+        for s in ckpts[: -self.keep]:
+            os.remove(self._path(s))
+
+    def list_steps(self) -> List[int]:
+        out = []
+        for f in os.listdir(self.dir):
+            if f.startswith("ckpt_") and f.endswith(".pkl"):
+                out.append(int(f[5:13]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        with open(self._path(step), "rb") as f:
+            payload = pickle.load(f)
+        payload["control_log"] = [LogRecord(**r)
+                                  for r in payload["control_log"]]
+        return payload

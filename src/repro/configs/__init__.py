@@ -1,0 +1,7 @@
+from repro.configs.base import ArchConfig, MoECfg, SSMCfg, ShapeCfg, SHAPES, reduced
+from repro.configs.registry import get_arch, get_shape, ARCH_IDS, all_cells, cell_applicable
+
+__all__ = [
+    "ArchConfig", "MoECfg", "SSMCfg", "ShapeCfg", "SHAPES", "reduced",
+    "get_arch", "get_shape", "ARCH_IDS", "all_cells", "cell_applicable",
+]

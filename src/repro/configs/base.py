@@ -1,0 +1,159 @@
+"""Architecture and shape configuration dataclasses.
+
+Every assigned architecture is expressed as an ``ArchConfig``; heterogeneous
+layer stacks (gemma3 local:global, zamba2 mamba+shared-attn) are expressed via
+``layer_pattern`` — a tuple of block-type names, one per layer.  Block types:
+
+  "attn"        full-attention decoder block (causal)
+  "local"       sliding-window attention decoder block (window = cfg.window)
+  "moe"         attention + MoE-FFN decoder block
+  "rwkv"        RWKV6 block (time-mix + channel-mix)
+  "mamba"       Mamba2 block
+  "shared_attn" attention+MLP block whose weights are SHARED across all its
+                occurrences (zamba2)
+  "enc"         bidirectional encoder block (whisper)
+  "dec"         decoder block with cross-attention (whisper)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    num_experts: int
+    top_k: int
+    expert_d_ff: int
+    capacity_factor: float = 1.25
+    # Reshape integration: spare physical expert slots available as helpers.
+    spare_slots: int = 2
+    # max replicas a single (hot) logical expert may be split across (SBR).
+    max_replicas: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    state_size: int = 64
+    head_dim: int = 64
+    conv_kernel: int = 4
+    expand: int = 2
+    chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm | audio
+    num_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    layer_pattern: Tuple[str, ...] = ()   # () -> ("attn",) * num_layers  (or moe)
+    window: int = 1024               # sliding window for "local" blocks
+    rope_theta: float = 10000.0
+    mrope: bool = False              # qwen2-vl M-RoPE (3-section rotary)
+    moe: Optional[MoECfg] = None
+    ssm: Optional[SSMCfg] = None
+    # encoder (whisper): encoder layer count + source length of frame embeddings
+    enc_layers: int = 0
+    enc_seq: int = 1500
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    # activation recompute policy: chosen by the Maestro materialization pass,
+    # overridable per-launch.  One of: "none", "full", "dots".
+    remat: str = "full"
+    # sub-quadratic? (drives long_500k applicability)
+    subquadratic: bool = False
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        if self.layer_pattern:
+            assert len(self.layer_pattern) == self.num_layers, self.name
+            return self.layer_pattern
+        if self.moe is not None:
+            return ("moe",) * self.num_layers
+        return ("attn",) * self.num_layers
+
+    def n_params(self) -> int:
+        """Total parameter count (embedding included once if tied)."""
+        from repro.analysis.flops import param_count
+        return param_count(self)
+
+    def n_active_params(self) -> int:
+        from repro.analysis.flops import param_count
+        return param_count(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+    # number of gradient-accumulation microbatches for train shapes
+    microbatches: int = 1
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES = {
+    "train_4k":    ShapeCfg("train_4k", 4096, 256, "train", microbatches=8),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k":  ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k":   ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+
+def reduced(cfg: ArchConfig, layers: int = 2, d_model: int = 64,
+            vocab: int = 512) -> ArchConfig:
+    """A smoke-test-sized config of the same family (pattern preserved)."""
+    scale = d_model / cfg.d_model
+    n_heads = max(2, min(4, cfg.n_heads))
+    n_kv = max(1, min(n_heads, cfg.n_kv_heads))
+    # preserve the pattern *shape*: keep one occurrence of each block type and
+    # the first `layers` entries of the pattern cycle.
+    pat = cfg.pattern
+    types_seen = []
+    small_pat = []
+    for t in pat:
+        small_pat.append(t)
+        if t not in types_seen:
+            types_seen.append(t)
+        if len(small_pat) >= layers and set(types_seen) == set(pat):
+            break
+    moe = None
+    if cfg.moe is not None:
+        moe = dataclasses.replace(cfg.moe, num_experts=8, top_k=2,
+                                  expert_d_ff=4 * d_model, spare_slots=2)
+    ssm = None
+    if cfg.ssm is not None:
+        ssm = dataclasses.replace(cfg.ssm, state_size=16, head_dim=16, chunk=16)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        num_layers=len(small_pat),
+        layer_pattern=tuple(small_pat),
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=d_model // n_heads,
+        d_ff=4 * d_model,
+        vocab=vocab,
+        moe=moe,
+        ssm=ssm,
+        enc_layers=min(cfg.enc_layers, 2),
+        enc_seq=min(cfg.enc_seq, 16),
+        window=min(cfg.window, 8),
+    )

@@ -1,0 +1,53 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, ShapeCfg, SHAPES, reduced
+
+_MODULES = {
+    "whisper-base": "repro.configs.whisper_base",
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "starcoder2-7b": "repro.configs.starcoder2_7b",
+    "yi-34b": "repro.configs.yi_34b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "paper-moe-100m": "repro.configs.paper_moe_100m",
+}
+
+ARCH_IDS = tuple(k for k in _MODULES if k != "paper-moe-100m")
+
+
+def get_arch(name: str) -> ArchConfig:
+    import importlib
+    if name.endswith("-smoke"):
+        return reduced(get_arch(name[: -len("-smoke")]))
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_shape(name: str) -> ShapeCfg:
+    return SHAPES[name]
+
+
+def cell_applicable(arch: ArchConfig, shape: ShapeCfg) -> tuple[bool, str]:
+    """Is this (arch x shape) dry-run cell runnable?  See DESIGN.md §4."""
+    if shape.name == "long_500k" and not arch.subquadratic:
+        return False, ("pure full-attention arch: 512k dense KV cache per layer "
+                       "is the non-sub-quadratic case (skip per assignment)")
+    if shape.kind == "train" and arch.family == "audio":
+        # whisper trains enc-dec on (audio frames -> text); supported.
+        return True, ""
+    return True, ""
+
+
+def all_cells():
+    """Yield (arch_name, shape_name, applicable, reason) for all 40 cells."""
+    for a in ARCH_IDS:
+        arch = get_arch(a)
+        for s in SHAPES:
+            ok, why = cell_applicable(arch, SHAPES[s])
+            yield a, s, ok, why

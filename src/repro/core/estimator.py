@@ -1,0 +1,78 @@
+"""Workload estimation (paper §3.3.2, §3.4.3.2).
+
+The mean-model estimator predicts a worker's future per-interval workload as
+the mean of its sampled history; its standard error of prediction is
+    eps = d * sqrt(1 + 1/n)
+(d = sample standard deviation, n = sample size) — the quantity Algorithm 1
+steers into the user's [eps_l, eps_u] band by adjusting tau.
+"""
+from __future__ import annotations
+
+import math
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+
+class MeanModelEstimator:
+    def __init__(self):
+        self._samples: Dict[int, List[float]] = defaultdict(list)
+
+    def add(self, workloads: Dict[int, float]) -> None:
+        for w, v in workloads.items():
+            self._samples[w].append(float(v))
+
+    def reset(self, worker: int | None = None) -> None:
+        if worker is None:
+            self._samples.clear()
+        else:
+            self._samples.pop(worker, None)
+
+    def n(self, worker: int) -> int:
+        return len(self._samples[worker])
+
+    def predict(self, worker: int) -> Tuple[float, float]:
+        """Returns (phi_hat, eps) — predicted workload and standard error."""
+        xs = self._samples[worker]
+        if not xs:
+            return 0.0, float("inf")
+        n = len(xs)
+        mean = sum(xs) / n
+        if n < 2:
+            return mean, float("inf")
+        var = sum((x - mean) ** 2 for x in xs) / (n - 1)
+        eps = math.sqrt(var) * math.sqrt(1.0 + 1.0 / n)
+        return mean, eps
+
+    def predict_pair(self, s: int, h: int) -> Tuple[float, float, float]:
+        """(phi_hat_S, phi_hat_H, eps) — eps pooled over the pair."""
+        ps, es = self.predict(s)
+        ph, eh = self.predict(h)
+        eps = max(es, eh)
+        return ps, ph, eps
+
+
+class EMAEstimator:
+    """Streaming variant used by the MoE runtime (per-slot EMAs)."""
+
+    def __init__(self, beta: float = 0.8):
+        self.beta = beta
+        self.value = None
+        self._var = None
+
+    def add(self, x):
+        import numpy as np
+        x = np.asarray(x, dtype=float)
+        if self.value is None:
+            self.value = x
+            self._var = x * 0.0
+        else:
+            delta = x - self.value
+            self.value = self.beta * self.value + (1 - self.beta) * x
+            self._var = self.beta * self._var + (1 - self.beta) * delta ** 2
+
+    def predict(self):
+        import numpy as np
+        if self.value is None:
+            return None, float("inf")
+        eps = float(np.sqrt(np.mean(self._var)))
+        return self.value, eps

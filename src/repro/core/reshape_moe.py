@@ -1,0 +1,334 @@
+"""Reshape -> MoE expert-parallel integration (Tier B, DESIGN.md §2).
+
+The paper's abstractions mapped onto synchronous expert-parallel training:
+
+  worker            = EP rank (device column of the "model" mesh axis)
+  partition         = the logical experts whose *home slot* lives on a rank
+  workload phi      = EMA of tokens routed to a rank per step (from the free
+                      in-layer metrics) + overflow backlog counter
+  partitioning logic= the RoutingPlan arrays (jittable step inputs)
+  SBR               = split a hot expert's tokens between its home slot and a
+                      replica in a helper rank's spare slot
+  SBK               = move a whole expert into a helper rank's spare slot
+  state migration   = copying the expert's weights (+ optimizer moments) into
+                      the spare slot; cost enters tau' (§3.6.1)
+  phase 1           = boosted redirect fraction while the skewed rank drains
+                      its overflow backlog; phase 2 = estimator-based fraction
+
+Slot layout interleaves one spare per rank:  rank d owns slots
+[d*(epd+1), (d+1)*(epd+1)); the last one is its spare.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.adaptive import TauAdjuster, tau_prime
+from repro.core.skew import SkewParams
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotLayout:
+    num_experts: int
+    ep_ranks: int
+
+    @property
+    def experts_per_rank(self) -> int:
+        assert self.num_experts % self.ep_ranks == 0
+        return self.num_experts // self.ep_ranks
+
+    @property
+    def slots_per_rank(self) -> int:
+        return self.experts_per_rank + 1          # one spare per rank
+
+    @property
+    def num_slots(self) -> int:
+        return self.slots_per_rank * self.ep_ranks
+
+    def home_slot(self, e: int) -> int:
+        epd = self.experts_per_rank
+        return (e // epd) * self.slots_per_rank + (e % epd)
+
+    def spare_slot(self, rank: int) -> int:
+        return rank * self.slots_per_rank + self.experts_per_rank
+
+    def rank_of_slot(self, s: int) -> int:
+        return s // self.slots_per_rank
+
+    def rank_of_expert(self, e: int) -> int:
+        return e // self.experts_per_rank
+
+
+@dataclasses.dataclass
+class Migration:
+    layer: int
+    src_slot: int
+    dst_slot: int
+
+
+@dataclasses.dataclass
+class MitigationEvent:
+    layer: int
+    skewed_rank: int
+    helper_rank: int
+    hot_expert: int
+    fraction: float
+    phase: int
+    migration: Optional[Migration]
+
+
+class MoEReshaper:
+    """Host-side controller logic: observe per-step metrics, emit new plans
+    + expert-state migrations between steps (the fast control path)."""
+
+    def __init__(self, cfg: ArchConfig, n_moe_layers: int, ep_ranks: int,
+                 params: SkewParams = SkewParams(eta=0.0, tau=0.25),
+                 ema_beta: float = 0.8, adaptive: Optional[TauAdjuster] = None,
+                 phase1_steps: int = 2, mode: str = "sbr",
+                 migration_steps: float = 0.0):
+        self.cfg = cfg
+        self.nl = n_moe_layers
+        self.layout = SlotLayout(cfg.moe.num_experts, ep_ranks)
+        self.params = params                  # tau as FRACTION of mean load
+        self.ema_beta = ema_beta
+        self.adaptive = adaptive
+        self.phase1_steps = phase1_steps
+        self.mode = mode
+        self.migration_steps = migration_steps
+        e, r = cfg.moe.num_experts, cfg.moe.max_replicas
+        self.plan_slots = np.zeros((n_moe_layers, e, r), np.int32)
+        for le in range(e):
+            self.plan_slots[:, le, :] = self.layout.home_slot(le)
+        self.plan_cum = np.ones((n_moe_layers, e, r), np.float32)
+        self._ema_expert = None               # [L, E]
+        self._ema_var = None
+        self.backlog = np.zeros((n_moe_layers, ep_ranks), np.float64)
+        # spare-slot ownership: (layer, rank) -> expert replica hosted there
+        self.spare_owner: Dict[Tuple[int, int], int] = {}
+        # experts under active mitigation: (layer, expert) -> phase1 steps left
+        self.active: Dict[Tuple[int, int], int] = {}
+        self.events: List[MitigationEvent] = []
+        self.iterations = 0
+
+    # ------------------------------------------------------------- observe
+    def observe(self, expert_counts: np.ndarray,
+                dropped_per_layer: Optional[np.ndarray] = None) -> None:
+        """expert_counts [L, E] tokens routed per logical expert this step."""
+        x = np.asarray(expert_counts, np.float64)
+        if self._ema_expert is None:
+            self._ema_expert = x.copy()
+            self._ema_var = np.zeros_like(x)
+        else:
+            d = x - self._ema_expert
+            self._ema_expert = self.ema_beta * self._ema_expert + \
+                (1 - self.ema_beta) * x
+            self._ema_var = self.ema_beta * self._ema_var + \
+                (1 - self.ema_beta) * d * d
+        if dropped_per_layer is not None:
+            # attribute overflow to the currently-loaded rank
+            for l in range(self.nl):
+                loads = self.rank_loads(l)
+                self.backlog[l, int(np.argmax(loads))] += float(
+                    dropped_per_layer[l])
+
+    def rank_loads(self, layer: int) -> np.ndarray:
+        """Predicted tokens/step per EP rank under the CURRENT plan."""
+        loads = np.zeros(self.layout.ep_ranks)
+        e = self.cfg.moe.num_experts
+        for le in range(e):
+            pred = self._ema_expert[layer, le]
+            cum_prev = 0.0
+            for r in range(self.plan_slots.shape[2]):
+                cum = self.plan_cum[layer, le, r]
+                frac = cum - cum_prev
+                if frac > 0:
+                    rank = self.layout.rank_of_slot(
+                        int(self.plan_slots[layer, le, r]))
+                    loads[rank] += pred * frac
+                cum_prev = cum
+        return loads
+
+    # ------------------------------------------------------------ mitigate
+    def _current_frac(self, layer: int, expert: int) -> float:
+        """TOTAL fraction of this expert's tokens currently redirected away
+        from its home slot (0 under the identity plan)."""
+        home = self.layout.home_slot(expert)
+        prev, redirected = 0.0, 0.0
+        for slot, cum in zip(self.plan_slots[layer, expert],
+                             self.plan_cum[layer, expert]):
+            frac = float(cum) - prev
+            prev = float(cum)
+            if frac > 0 and int(slot) != home:
+                redirected += frac
+        return redirected
+
+    def _set_split(self, layer: int, expert: int, helper_slot: int,
+                   frac: float) -> None:
+        home = self.layout.home_slot(expert)
+        r = self.plan_slots.shape[2]
+        self.plan_slots[layer, expert, 0] = helper_slot
+        self.plan_slots[layer, expert, 1:] = home
+        cum = np.ones(r, np.float32)
+        cum[0] = frac
+        self.plan_cum[layer, expert] = cum
+
+    def _move_expert(self, layer: int, expert: int, dst_slot: int) -> None:
+        self.plan_slots[layer, expert, :] = dst_slot
+        self.plan_cum[layer, expert, :] = 1.0
+
+    def step(self) -> Tuple[np.ndarray, np.ndarray, List[Migration]]:
+        """Run detection/mitigation; returns (plan_slots, plan_cum,
+        migrations to apply to params/opt state *before* the next step)."""
+        migrations: List[Migration] = []
+        if self._ema_expert is None:
+            return self.plan_slots, self.plan_cum, migrations
+        for l in range(self.nl):
+            migrations.extend(self._step_layer(l))
+        return self.plan_slots.copy(), self.plan_cum.copy(), migrations
+
+    def _replicas_of(self, l: int, e: int) -> List[int]:
+        """Spare-slot ranks currently hosting a replica of expert e."""
+        return [rank for (ll, rank), owner in self.spare_owner.items()
+                if ll == l and owner == e]
+
+    def _waterfill(self, l: int, hot: int, helper_ranks: List[int],
+                   loads: np.ndarray, boost: float = 1.0) -> None:
+        """Split the hot expert across its home rank + helper spares so all
+        participating ranks approach the common level (§3.6.2 extended to
+        SBR fractions).  ``boost`` > 1 over-redirects (phase-1 catch-up)."""
+        s = self.layout.rank_of_expert(hot)
+        phi = max(self._ema_expert[l, hot], 1e-9)
+        base_s = loads[s] - phi * (1.0 - self._current_frac(l, hot))
+        # subtract this expert's replica contribution from each helper's base
+        bases = []
+        cur_slots = list(self.plan_slots[l, hot])
+        cur_cum = list(self.plan_cum[l, hot])
+        for h in helper_ranks:
+            contrib = 0.0
+            prev = 0.0
+            for slot, cum in zip(cur_slots, cur_cum):
+                frac = cum - prev
+                prev = cum
+                if frac > 0 and self.layout.rank_of_slot(int(slot)) == h and \
+                        int(slot) == self.layout.spare_slot(h):
+                    contrib += phi * frac
+            bases.append(loads[h] - contrib)
+        total = phi + base_s + sum(bases)
+        per = total / (1 + len(helper_ranks))
+        f_helpers = [max(0.0, (per - b)) / phi for b in bases]
+        f_helpers = [min(1.0, f * boost) for f in f_helpers]
+        ftot = sum(f_helpers)
+        if ftot > 1.0:
+            f_helpers = [f / ftot for f in f_helpers]
+            ftot = 1.0
+        # plan row: [spare(h1), spare(h2), ..., home, home, ...]
+        r = self.plan_slots.shape[2]
+        slots = [self.layout.spare_slot(h) for h in helper_ranks]
+        slots = slots[: r - 1] + [self.layout.home_slot(hot)] * \
+            (r - min(len(slots), r - 1))
+        cum, acc = [], 0.0
+        for f in f_helpers[: r - 1]:
+            acc = min(1.0, acc + f)
+            cum.append(acc)
+        cum += [1.0] * (r - len(cum))
+        self.plan_slots[l, hot] = np.asarray(slots[:r], np.int32)
+        self.plan_cum[l, hot] = np.asarray(cum[:r], np.float32)
+
+    def _step_layer(self, l: int) -> List[Migration]:
+        out: List[Migration] = []
+        loads = self.rank_loads(l)
+        mean = max(loads.mean(), 1e-9)
+        eps = float(np.sqrt(self._ema_var[l].mean())) / mean
+        tau = self.adaptive.tau if self.adaptive else self.params.tau
+        if self.migration_steps:
+            tau = max(0.01, tau_prime(tau, 0.6, 0.4, 1.0,
+                                      self.migration_steps))
+        max_helpers = self.plan_slots.shape[2] - 1
+
+        # ---- maintain active mitigations: re-waterfill with a stable
+        # helper set; phase-1 boost while the backlog drains (two phases)
+        for (ll, hot), left in list(self.active.items()):
+            if ll != l:
+                continue
+            s = self.layout.rank_of_expert(hot)
+            helpers = self._replicas_of(l, hot)
+            if not helpers:
+                del self.active[(l, hot)]
+                continue
+            boost = 1.5 if (left > 0 and self.backlog[l, s] > 0) else 1.0
+            self._waterfill(l, hot, helpers, loads, boost)
+            self.active[(l, hot)] = max(0, left - 1)
+            self.backlog[l, s] = max(0.0, self.backlog[l, s] - mean)
+
+        # ---- detect new skew (eq 3.1/3.2 at rank granularity)
+        loads = self.rank_loads(l)
+        s = int(np.argmax(loads))
+        if loads[s] < self.params.eta or (loads[s] - loads.min()) / mean < tau:
+            return out
+        cands = [e for e in range(self.cfg.moe.num_experts)
+                 if self.layout.rank_of_expert(e) == s]
+        hot = int(max(cands, key=lambda e: self._ema_expert[l, e]))
+        if self.adaptive:
+            self.adaptive.adjust(loads[s] / mean, loads.min() / mean, eps)
+        self.iterations += 1
+
+        if self.mode == "sbk":
+            # move the smallest expert worth ~the gap (cannot split the hot
+            # key — the Flux-style limitation the paper contrasts with)
+            move = min(cands, key=lambda e: self._ema_expert[l, e])
+            h = int(np.argmin(loads))
+            if (l, h) not in self.spare_owner:
+                spare = self.layout.spare_slot(h)
+                self.spare_owner[(l, h)] = move
+                out.append(Migration(l, self.layout.home_slot(move), spare))
+                self._move_expert(l, move, spare)
+                self.events.append(MitigationEvent(l, s, h, move, 1.0, 2,
+                                                   out[-1]))
+            return out
+
+        # ---- SBR: (re)build the helper set for the hot expert — reuse its
+        # existing replicas, extend with least-loaded ranks w/ free spares
+        helpers = self._replicas_of(l, hot)
+        order = [int(h) for h in np.argsort(loads) if int(h) != s]
+        phi = max(self._ema_expert[l, hot], 1e-9)
+        for h in order:
+            if len(helpers) >= max_helpers:
+                break
+            if h in helpers:
+                continue
+            if self.spare_owner.get((l, h)) not in (None, hot):
+                continue                      # spare already hosts another
+            # does adding this helper reduce the common level? (chi logic)
+            if loads[h] >= loads[s]:
+                break
+            helpers.append(h)
+            if (phi + sum(loads[x] for x in helpers + [s])) / \
+                    (len(helpers) + 1) <= mean * (1 + tau / 2):
+                break
+        if not helpers:
+            return out
+        for h in helpers:
+            if self.spare_owner.get((l, h)) != hot:
+                self.spare_owner[(l, h)] = hot
+                out.append(Migration(l, self.layout.home_slot(hot),
+                                     self.layout.spare_slot(h)))
+        has_backlog = self.backlog[l, s] > 0
+        self._waterfill(l, hot, helpers, loads,
+                        boost=1.5 if has_backlog else 1.0)
+        self.active[(l, hot)] = self.phase1_steps if has_backlog else 0
+        self.events.append(MitigationEvent(
+            l, s, helpers[0], hot, float(self.plan_cum[l, hot, 0]),
+            1 if has_backlog else 2, out[-1] if out else None))
+        return out
+
+
+def apply_migrations_np(expert_leaf: np.ndarray,
+                        migrations: List[Migration]) -> np.ndarray:
+    """Reference (numpy) state migration on a [L, S, ...] stacked leaf."""
+    out = expert_leaf.copy()
+    for m in migrations:
+        out[m.layer, m.dst_slot] = out[m.layer, m.src_slot]
+    return out

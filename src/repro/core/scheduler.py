@@ -1,0 +1,135 @@
+"""Result-aware choice selection (paper §4.5.2–4.5.4) + the ML mapping.
+
+First-response time (FRT) of a materialization choice: every region that must
+complete before the sink's region runs is paid in full; the sink's region
+contributes only its pipeline-fill latency (time to the FIRST tuple out of
+the sink, Figs 4.13–4.15).  Maestro picks the min-FRT choice, tie-breaking
+on materialized bytes (§4.6.3).
+
+ML mapping (DESIGN.md §2): the same machinery selects the activation
+materialization (remat) policy of the training step — regions = {fwd, bwd,
+opt}; "materializing" the fwd/bwd edge = saving activations; FRT analogue =
+step latency subject to the HBM budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+import networkx as nx
+
+from repro.core.materialization import Edge, enumerate_choices
+from repro.core.regions import (Workflow, region_graph, region_of, regions,
+                                schedule)
+
+
+@dataclasses.dataclass
+class CostModel:
+    parallelism: float = 1.0
+    tuple_bytes: float = 64.0
+
+
+def cardinalities(wf: Workflow) -> Dict[str, float]:
+    """Output cardinality per op (topological propagation)."""
+    cards: Dict[str, float] = {}
+    for n in nx.topological_sort(wf.g):
+        op = wf.ops[n]
+        inp = sum(cards[p] for p in wf.g.predecessors(n))
+        cards[n] = op.source_cardinality if wf.g.in_degree(n) == 0 \
+            else op.selectivity * inp
+    return cards
+
+
+def region_full_time(wf: Workflow, region: FrozenSet[str],
+                     cards: Dict[str, float], cm: CostModel) -> float:
+    t = 0.0
+    for n in region:
+        op = wf.ops[n]
+        inp = sum(cards[p] for p in wf.g.predecessors(n)) or \
+            op.source_cardinality
+        t += inp * op.cost_per_tuple / cm.parallelism
+    return t
+
+
+def region_first_tuple_time(wf: Workflow, region: FrozenSet[str],
+                            cm: CostModel) -> float:
+    """Pipeline-fill latency ~ per-tuple cost along the longest path."""
+    sub = wf.g.subgraph(region)
+    best = 0.0
+    for n in region:
+        if sub.in_degree(n) == 0:
+            for m in region:
+                if sub.out_degree(m) == 0:
+                    for p in nx.all_simple_paths(sub, n, m):
+                        best = max(best, sum(wf.ops[x].cost_per_tuple
+                                             for x in p))
+                    best = max(best, wf.ops[n].cost_per_tuple)
+    return best / cm.parallelism
+
+
+def first_response_time(wf: Workflow, choice: FrozenSet[Edge],
+                        cm: CostModel) -> float:
+    w = wf.materialize(choice)
+    regs = regions(w)
+    rg = region_graph(w)
+    cards = cardinalities(w)
+    sinks = w.sinks()
+    # multiple sink-feeding regions (Fig 4.14/4.15): min over sinks
+    best = float("inf")
+    for s in sinks:
+        rs = region_of(regs, s)
+        upstream = nx.ancestors(rg, rs)
+        t = sum(region_full_time(w, r, cards, cm) for r in upstream)
+        t += region_first_tuple_time(w, rs, cm)
+        best = min(best, t)
+    return best
+
+
+def materialized_bytes(wf: Workflow, choice: FrozenSet[Edge],
+                       cm: CostModel) -> float:
+    cards = cardinalities(wf)
+    return sum(cards[u] * cm.tuple_bytes for u, _ in choice)
+
+
+def choose(wf: Workflow, cm: CostModel) -> Tuple[FrozenSet[Edge], dict]:
+    """Result-aware materialization selection: min FRT, then min bytes."""
+    options = enumerate_choices(wf)
+    scored = []
+    for c in options:
+        scored.append((first_response_time(wf, c, cm),
+                       materialized_bytes(wf, c, cm), c))
+    scored.sort(key=lambda x: (x[0], x[1]))
+    frt, mbytes, best = scored[0]
+    return best, {"frt": frt, "bytes": mbytes,
+                  "all": [(f, b, sorted(c)) for f, b, c in scored]}
+
+
+# ------------------------------------------------------------- ML mapping
+
+@dataclasses.dataclass
+class RematOption:
+    name: str                      # none | dots | full
+    act_bytes_per_layer: float     # activations persisted per layer
+    recompute_flops_factor: float  # extra fwd fraction paid in bwd
+
+
+def remat_policy(cfg, shape, hbm_bytes_per_device: float,
+                 act_bytes_per_layer: Dict[str, float],
+                 step_flops: float, peak_flops: float) -> Tuple[str, dict]:
+    """Maestro-style result-aware choice of the activation materialization:
+    pick the fastest policy whose persisted activations fit the budget."""
+    options = [
+        RematOption("none", act_bytes_per_layer["none"], 0.0),
+        RematOption("dots", act_bytes_per_layer["dots"], 0.30),
+        RematOption("full", act_bytes_per_layer["full"], 1.0 / 3.0),
+    ]
+    scored = []
+    for o in options:
+        mem = o.act_bytes_per_layer * cfg.num_layers
+        time = step_flops * (1 + o.recompute_flops_factor) / peak_flops
+        fits = mem <= hbm_bytes_per_device
+        scored.append((not fits, time, o.name, mem))
+    scored.sort()
+    bad, time, name, mem = scored[0]
+    return name, {"fits": not bad, "est_time": time, "act_bytes": mem,
+                  "all": scored}

@@ -1,0 +1,28 @@
+"""Jit'd dispatch wrapper: pallas kernel (TPU), interpret (CPU validation),
+or the chunked-jnp path (what the CPU dry-run lowers)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.models.attention import chunked_attention
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    impl: str = "auto"):
+    """q [B,Sq,H,hd]; k,v [B,Sk,KH,hd].  Returns [B,Sq,H,hd]."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "jnp":
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset)
+    from repro.models.attention import repeat_kv
+    h, kh = q.shape[2], k.shape[2]
+    kr = repeat_kv(k, h // kh).transpose(0, 2, 1, 3)
+    vr = repeat_kv(v, h // kh).transpose(0, 2, 1, 3)
+    out = flash_attention_pallas(
+        q.transpose(0, 2, 1, 3), kr, vr, causal=causal, window=window,
+        q_offset=q_offset, interpret=(impl == "interpret"))
+    return out.transpose(0, 2, 1, 3)

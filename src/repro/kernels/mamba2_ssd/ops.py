@@ -1,0 +1,75 @@
+"""Chunked Mamba2 SSD — jnp implementation + Pallas dispatch.
+
+Mamba2's scalar-per-head decay makes the chunked form exact (the decay matrix
+L[t,s] = exp(la_t - la_s) is always <= 1 on the causal triangle — no clamp
+needed, unlike RWKV6's per-channel decay).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba2_chunked(x, dt, a, bm, c, d, h0=None, chunk: int = 128):
+    """Shapes as in ref.  Returns (y [B,H,T,P], hT [B,H,P,N])."""
+    b, h, t, p = x.shape
+    n = bm.shape[-1]
+    q = min(chunk, t)
+    assert t % q == 0
+    nc = t // q
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    f32 = jnp.float32
+
+    xd = (x.astype(f32) * dt[..., None].astype(f32))          # dt-weighted x
+    la_step = dt.astype(f32) * a[None, :, None]               # log decay/step
+
+    xc = xd.reshape(b, h, nc, q, p).transpose(2, 0, 1, 3, 4)
+    lc = la_step.reshape(b, h, nc, q).transpose(2, 0, 1, 3)
+    bc = jnp.broadcast_to(bm.astype(f32)[:, None], (b, h, t, n)) \
+        .reshape(b, h, nc, q, n).transpose(2, 0, 1, 3, 4)
+    cc = jnp.broadcast_to(c.astype(f32)[:, None], (b, h, t, n)) \
+        .reshape(b, h, nc, q, n).transpose(2, 0, 1, 3, 4)
+
+    tri = jnp.tril(jnp.ones((q, q), bool))                    # incl. diagonal
+
+    def body(hs, inp):
+        xb, lb, bb, cb = inp                                  # per-chunk
+        la = jnp.cumsum(lb, axis=-1)                          # [B,H,Q]
+        seg = la[..., :, None] - la[..., None, :]             # [B,H,Q,Q]
+        L = jnp.where(tri[None, None], jnp.exp(seg), 0.0)
+        att = jnp.einsum("bhqn,bhsn->bhqs", cb, bb) * L
+        y = jnp.einsum("bhqs,bhsp->bhqp", att, xb)
+        y = y + jnp.exp(la)[..., None] * jnp.einsum("bhpn,bhqn->bhqp", hs, cb)
+        la_q = la[..., -1:]
+        x_dec = xb * jnp.exp(la_q - la)[..., None]
+        hs_new = jnp.exp(la_q)[..., None] * hs + jnp.einsum(
+            "bhqp,bhqn->bhpn", x_dec, bb)
+        return hs_new, y
+
+    hT, ys = jax.lax.scan(body, h0.astype(f32), (xc, lc, bc, cc))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, t, p)
+    y = y + d[None, :, None, None] * x.astype(f32)
+    return y.astype(x.dtype), hT
+
+
+def mamba2_decode_step(xt, dtt, a, bt, ct, d, hs):
+    """One-token update.  xt [B,H,P]; dtt [B,H]; bt,ct [B,N]; hs [B,H,P,N]."""
+    f32 = jnp.float32
+    decay = jnp.exp(dtt.astype(f32) * a[None])
+    hs = hs * decay[..., None, None] + \
+        (dtt[..., None].astype(f32) * xt.astype(f32))[..., :, None] * \
+        bt.astype(f32)[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", hs, ct.astype(f32)) + \
+        d[None, :, None] * xt.astype(f32)
+    return y.astype(xt.dtype), hs
+
+
+def mamba2(x, dt, a, bm, c, d, h0=None, chunk: int = 128, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "jnp":
+        return mamba2_chunked(x, dt, a, bm, c, d, h0, chunk)
+    from repro.kernels.mamba2_ssd.mamba2_ssd import mamba2_pallas
+    return mamba2_pallas(x, dt, a, bm, c, d, h0, chunk=chunk,
+                         interpret=(impl == "interpret"))

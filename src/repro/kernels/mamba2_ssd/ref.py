@@ -1,0 +1,37 @@
+"""Sequential (exact) Mamba2 SSD recurrence — the numerical oracle.
+
+Per (batch, head), state h [P, N] (P = head dim, N = d_state):
+    h_t = exp(dt_t * A) h_{t-1} + (dt_t * x_t) B_t^T
+    y_t = h_t C_t + D * x_t
+A < 0 scalar per head; B, C shared across heads (n_groups = 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba2_ref(x, dt, a, bm, c, d, h0=None):
+    """x [B,H,T,P]; dt [B,H,T]; a [H]; bm,c [B,T,N]; d [H].
+    Returns (y [B,H,T,P], hT [B,H,P,N])."""
+    b, h, t, p = x.shape
+    n = bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    f32 = jnp.float32
+
+    def step(hs, inp):
+        xt, dtt, bt, ct = inp                    # [B,H,P],[B,H],[B,N],[B,N]
+        decay = jnp.exp(dtt * a[None])           # [B,H]
+        hs = hs * decay[..., None, None] + \
+            (dtt[..., None] * xt)[..., :, None] * bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", hs, ct)
+        return hs, y
+
+    xs = x.transpose(2, 0, 1, 3).astype(f32)
+    dts = dt.transpose(2, 0, 1).astype(f32)
+    bs = bm.transpose(1, 0, 2).astype(f32)
+    cs = c.transpose(1, 0, 2).astype(f32)
+    hT, ys = jax.lax.scan(step, h0.astype(f32), (xs, dts, bs, cs))
+    y = ys.transpose(1, 2, 0, 3) + d[None, :, None, None] * x.astype(f32)
+    return y.astype(x.dtype), hT

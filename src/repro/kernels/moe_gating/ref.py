@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for fused MoE gating: softmax + top-k + load histogram."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gating_ref(logits, k: int):
+    """logits [T,E] -> (weights [T,k], experts [T,k] i32, counts [E] i32).
+
+    weights are the re-normalized top-k softmax probabilities; counts is the
+    Reshape load metric phi (tokens routed per expert, pre-capacity).
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    weights = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    e = logits.shape[-1]
+    counts = jnp.zeros((e,), jnp.int32).at[top_e.reshape(-1)].add(1)
+    return weights, top_e.astype(jnp.int32), counts

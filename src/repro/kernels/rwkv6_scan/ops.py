@@ -1,0 +1,77 @@
+"""Chunked RWKV6 — jnp implementation (dry-run path + kernel oracle at scale)
+and the Pallas dispatch.
+
+TPU adaptation of the GPU per-thread recurrence: the sequence is split into
+chunks of Q tokens; within a chunk the recurrence becomes dense matmuls
+(MXU work) — an intra-chunk "attention" with decay-weighted keys — and the
+state is carried across chunks.  Exponent factoring uses the clamp trick
+(exact when cumulative in-chunk decay stays above e^-CLAMP; see kernel tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CLAMP = 30.0
+
+
+def rwkv6_chunked(r, k, v, w, u, s0=None, chunk: int = 64):
+    """r,k,v,w [B,H,T,N]; u [H,N].  Returns (y [B,H,T,N], sT [B,H,N,N])."""
+    b, h, t, n = r.shape
+    q = min(chunk, t)
+    assert t % q == 0, (t, q)
+    nc = t // q
+    if s0 is None:
+        s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    f32 = jnp.float32
+
+    def reshape(x):
+        return x.astype(f32).reshape(b, h, nc, q, n).transpose(2, 0, 1, 3, 4)
+
+    rc, kc, vc, wc = map(reshape, (r, k, v, w))
+    uf = u.astype(f32)[None]                        # [1,H,N]
+    tri_strict = jnp.tril(jnp.ones((q, q), bool), -1)
+
+    def body(s, inp):
+        rb, kb, vb, wb = inp                        # [B,H,Q,N]
+        la = jnp.cumsum(jnp.log(wb), axis=2)        # inclusive cumulative
+        la_prev = jnp.pad(la, ((0, 0),) * 2 + ((1, 0), (0, 0)))[:, :, :-1]
+        q_t = rb * jnp.exp(la_prev)                 # decayed receptance
+        k_t = kb * jnp.exp(jnp.minimum(-la, CLAMP))
+        att = jnp.einsum("bhqn,bhsn->bhqs", q_t, k_t)
+        att = jnp.where(tri_strict[None, None], att, 0.0)
+        y = jnp.einsum("bhqs,bhsn->bhqn", att, vb)
+        # current-token bonus term
+        y = y + (rb * uf[:, :, None] * kb).sum(-1, keepdims=True) * vb
+        # contribution from the carried state
+        y = y + jnp.einsum("bhqn,bhnm->bhqm", q_t, s)
+        # state update: S' = diag(exp(la_Q)) S + sum_s (k_s*exp(la_Q-la_s)) v_s^T
+        la_q = la[:, :, -1:, :]
+        k_dec = kb * jnp.exp(la_q - la)
+        s_new = jnp.exp(la_q[:, :, 0, :, None]) * s + jnp.einsum(
+            "bhqn,bhqm->bhnm", k_dec, vb)
+        return s_new, y
+
+    sT, ys = jax.lax.scan(body, s0.astype(f32), (rc, kc, vc, wc))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, t, n)
+    return y.astype(r.dtype), sT
+
+
+def rwkv6_decode_step(rt, kt, vt, wt, u, s):
+    """One-token state update (serve path).  rt..wt [B,H,N]; s [B,H,N,N]."""
+    y = jnp.einsum("bhn,bhnm->bhm", rt.astype(jnp.float32), s) + \
+        (rt * u[None] * kt).sum(-1, keepdims=True).astype(jnp.float32) * \
+        vt.astype(jnp.float32)
+    s_new = wt.astype(jnp.float32)[..., :, None] * s + \
+        kt.astype(jnp.float32)[..., :, None] * vt.astype(jnp.float32)[..., None, :]
+    return y.astype(rt.dtype), s_new
+
+
+def rwkv6(r, k, v, w, u, s0=None, chunk: int = 64, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl == "jnp":
+        return rwkv6_chunked(r, k, v, w, u, s0, chunk)
+    from repro.kernels.rwkv6_scan.rwkv6_scan import rwkv6_pallas
+    return rwkv6_pallas(r, k, v, w, u, s0, chunk=chunk,
+                        interpret=(impl == "interpret"))

@@ -1,0 +1,34 @@
+"""Sequential (exact) RWKV6 WKV recurrence — the numerical oracle.
+
+State S [N_k, N_v] per (batch, head):
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with data-dependent per-channel decay w_t in (0, 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(r, k, v, w, u, s0=None):
+    """r,k,v,w [B,H,T,N]; u [H,N]; s0 [B,H,N,N].  Returns (y [B,H,T,N], sT)."""
+    b, h, t, n = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, n, n), jnp.float32)
+
+    uf = u[None].astype(jnp.float32)               # [1,H,N]
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                       # [B,H,N] each
+        y = jnp.einsum("bhn,bhnm->bhm", rt, s) + \
+            (rt * uf * kt).sum(-1, keepdims=True) * vt
+        s_new = wt[..., :, None] * s + kt[..., :, None] * vt[..., None, :]
+        return s_new, y
+
+    rs = r.transpose(2, 0, 1, 3).astype(jnp.float32)
+    ks = k.transpose(2, 0, 1, 3).astype(jnp.float32)
+    vs = v.transpose(2, 0, 1, 3).astype(jnp.float32)
+    ws = w.transpose(2, 0, 1, 3).astype(jnp.float32)
+    sT, ys = jax.lax.scan(step, s0.astype(jnp.float32), (rs, ks, vs, ws))
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype), sT

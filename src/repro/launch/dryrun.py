@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape) cell on the
+single-pod 16x16 mesh and the 2x16x16 multi-pod mesh, using ShapeDtypeStruct
+stand-ins (zero allocation).  Records memory_analysis / cost_analysis /
+HLO collective stats per cell for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--mesh single|multi|both]
+      [--arch <id>[,<id>..]] [--shape <name>[,..]] [--remat none|dots|full]
+      [--out results.json] [--hlo-dir dir]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline as RL
+from repro.analysis.hlo import collective_bytes
+from repro.configs import ARCH_IDS, SHAPES, cell_applicable, get_arch, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.runtime import sharding as SH
+from repro.runtime.serve import abstract_serve_inputs, build_serve_step
+from repro.runtime.train import TrainHyper, abstract_state, build_train_step, loss_fn
+
+
+def input_specs(cfg, shape):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.enc_layers:
+        out["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model),
+                                             jnp.bfloat16)
+    if cfg.mrope:
+        out["positions3"] = jax.ShapeDtypeStruct((b, s, 3), jnp.int32)
+    return out
+
+
+def plan_abstract(cfg):
+    nl = lm.n_moe_layers(cfg)
+    if nl == 0:
+        return (jax.ShapeDtypeStruct((1, 1, 1), jnp.int32),
+                jax.ShapeDtypeStruct((1, 1, 1), jnp.float32))
+    e, r = cfg.moe.num_experts, cfg.moe.max_replicas
+    return (jax.ShapeDtypeStruct((nl, e, r), jnp.int32),
+            jax.ShapeDtypeStruct((nl, e, r), jnp.float32))
+
+
+def lower_cell(arch_name, shape_name, mesh, remat="none", hlo_dir=None,
+               layout="tp", kv_dtype=None, force_seq_shard=False,
+               microbatches=None):
+    cfg = get_arch(arch_name)
+    if remat != "none":
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = get_shape(shape_name)
+    if microbatches:
+        shape = dataclasses.replace(shape, microbatches=microbatches)
+    pspec = SH.param_specs(cfg, mesh)
+    t0 = time.time()
+    nl_moe = lm.n_moe_layers(cfg)
+    plan_specs = (P(), P())
+
+    da_ = SH.data_axes(mesh)
+    act_spec = SH.act_spec_for(cfg, shape, mesh, layout)
+    if shape.kind == "train":
+        hyper = TrainHyper(remat=remat)
+        step = build_train_step(cfg, shape, hyper, mesh=mesh,
+                                act_spec=act_spec, layout=layout)
+        state = abstract_state(cfg)
+        state_specs = {"params": pspec,
+                       "opt": SH.opt_state_specs(pspec),
+                       "step": P()}
+        # opt moments share the param specs leaf-for-leaf
+        state_specs["opt"] = type(state["opt"])(pspec, pspec, P())
+        bspecs = SH.batch_specs(cfg, shape, mesh, layout)
+        batch = input_specs(cfg, shape)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_specs, bspecs) + plan_specs,
+                out_shardings=(state_specs, None),
+            ).lower(state, batch, *plan_abstract(cfg))
+    elif shape.kind == "prefill":
+        hyper = TrainHyper(remat="none")
+
+        def prefill(params, batch, ps, pc):
+            from repro.models import moe as moe_lib
+            plan = moe_lib.RoutingPlan(ps, pc) if nl_moe else None
+            logits, _ = lm.forward(params, batch, cfg, plan=plan, mesh=mesh,
+                                   act_spec=act_spec)
+            return logits
+
+        bspecs = SH.batch_specs(cfg, shape, mesh)
+        batch = input_specs(cfg, shape)
+        da = SH.data_axes(mesh)
+        vshard = "model" if cfg.vocab % SH.axis_size(mesh, "model") == 0 \
+            else None
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                prefill,
+                in_shardings=(pspec, bspecs) + plan_specs,
+                out_shardings=NamedSharding(mesh, P(da, None, vshard)),
+            ).lower(lm.abstract(cfg, jnp.bfloat16), batch,
+                    *plan_abstract(cfg))
+    else:  # decode
+        import jax.numpy as _jnp
+        da = SH.data_axes(mesh)
+        dp = SH.axis_size(mesh, da)
+        toks_sharded = shape.global_batch >= dp and not force_seq_shard
+        step = build_serve_step(cfg, mesh=mesh, tokens_sharded=toks_sharded)
+        kdt = {None: None, "bf16": None,
+               "f8": _jnp.float8_e4m3fn}[kv_dtype]
+        cache_abs, token = abstract_serve_inputs(cfg, shape, kdt)
+        cspecs = SH.cache_specs(cfg, mesh, shape, cache_abs,
+                                force_seq_shard=force_seq_shard)
+        tok_spec = P(da, None) if toks_sharded else P(None, None)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                step,
+                in_shardings=(pspec, cspecs, tok_spec) + plan_specs,
+                out_shardings=(None, cspecs),
+            ).lower(lm.abstract(cfg, jnp.bfloat16), cache_abs, token,
+                    *plan_abstract(cfg))
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    coll = collective_bytes(txt, cfg.num_layers)
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        with open(os.path.join(
+                hlo_dir, f"{arch_name}_{shape_name}_{len(mesh.devices.flat)}"
+                f".txt"), "w") as f:
+            f.write(txt)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rl = RL.analyze(cfg, shape, mesh_shape, remat=remat, hlo_text=None,
+                    layout=layout, kv_bytes=1 if kv_dtype == "f8" else 2,
+                    seq_shard_decode=force_seq_shard)
+    rl.hlo_collective_bytes = float(
+        sum(v for k, v in coll.items() if not k.startswith("_")))
+    return {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "x".join(str(d) for d in mesh.devices.shape),
+        "ok": True,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "total_per_device_gb": round(
+                (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                 + ma.output_size_in_bytes) / 2 ** 30, 3),
+        },
+        "cost_analysis": {
+            "flops": ca.get("flops", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0),
+        },
+        "collectives": {k: v for k, v in coll.items()},
+        "roofline": {
+            "compute_s": rl.compute_s, "memory_s": rl.memory_s,
+            "collective_s": rl.collective_s, "dominant": rl.dominant,
+            "model_flops": rl.model_flops, "hlo_flops": rl.hlo_flops,
+            "usefulness": rl.usefulness,
+            "roofline_fraction": rl.roofline_fraction,
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--layout", default="tp", choices=["tp", "dp"])
+    ap.add_argument("--kv-dtype", default=None, choices=[None, "bf16", "f8"])
+    ap.add_argument("--force-seq-shard", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        for a in archs:
+            cfg = get_arch(a)
+            for s in shapes:
+                ok, why = cell_applicable(cfg, SHAPES[s])
+                tag = f"{a} x {s} x {'2x16x16' if multi else '16x16'}"
+                if not ok:
+                    print(f"SKIP {tag}: {why}", flush=True)
+                    results.append({"arch": a, "shape": s,
+                                    "mesh": "2x16x16" if multi else "16x16",
+                                    "ok": None, "skip_reason": why})
+                    continue
+                try:
+                    r = lower_cell(a, s, mesh, args.remat, args.hlo_dir,
+                                   layout=args.layout, kv_dtype=args.kv_dtype,
+                                   force_seq_shard=args.force_seq_shard,
+                                   microbatches=args.microbatches)
+                    rr = r["roofline"]
+                    print(f"PASS {tag}: compile={r['compile_s']}s "
+                          f"mem/dev={r['memory']['total_per_device_gb']}GB "
+                          f"dominant={rr['dominant']} "
+                          f"roofline={rr['roofline_fraction']:.1%}",
+                          flush=True)
+                    results.append(r)
+                except Exception as e:
+                    print(f"FAIL {tag}: {e}", flush=True)
+                    traceback.print_exc()
+                    results.append({"arch": a, "shape": s,
+                                    "mesh": "2x16x16" if multi else "16x16",
+                                    "ok": False, "error": str(e)[:500]})
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    n_pass = sum(1 for r in results if r.get("ok"))
+    n_fail = sum(1 for r in results if r.get("ok") is False)
+    n_skip = sum(1 for r in results if r.get("ok") is None)
+    print(f"\n== dry-run: {n_pass} pass, {n_fail} fail, {n_skip} skip "
+          f"-> {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

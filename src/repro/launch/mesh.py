@@ -1,0 +1,22 @@
+"""Production mesh construction.  A FUNCTION, not a module-level constant —
+importing this module never touches jax device state."""
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Single-device mesh with the production axis names (smoke tests)."""
+    import jax
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline targets; see EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

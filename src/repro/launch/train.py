@@ -1,0 +1,81 @@
+"""Training launcher.
+
+CPU-scale end-to-end run (the container):
+  PYTHONPATH=src python -m repro.launch.train --arch paper-moe-100m-smoke \\
+      --steps 100 --reshape --ckpt-dir /tmp/ck
+
+Cluster-scale (TPU pod; same code path, production mesh + jit step):
+  python -m repro.launch.train --arch olmoe-1b-7b --shape train_4k \\
+      --mesh single --steps 10000
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-moe-100m-smoke")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reshape", action="store_true",
+                    help="enable Reshape expert-skew mitigation")
+    ap.add_argument("--class-alpha", type=float, default=1.5,
+                    help="token-class Zipf skew (drives routing skew)")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ep-ranks", type=int, default=2)
+    args = ap.parse_args()
+
+    from repro.configs import get_arch
+    from repro.core.reshape_moe import MoEReshaper
+    from repro.core.skew import SkewParams
+    from repro.data.synthetic import TokenStream
+    from repro.models import lm
+    from repro.optim.adamw import AdamWCfg
+    from repro.runtime.loop import LoopConfig, TrainLoop
+    from repro.runtime.train import TrainHyper
+
+    cfg = get_arch(args.arch)
+    stream = TokenStream(vocab=cfg.vocab, seq_len=args.seq_len,
+                         global_batch=args.global_batch, seed=0,
+                         class_alpha=args.class_alpha)
+    hyper = TrainHyper(opt=AdamWCfg(lr=args.lr, warmup_steps=20,
+                                    total_steps=max(args.steps, 100)))
+    lc = LoopConfig(microbatches=args.microbatches,
+                    ckpt_every=args.ckpt_every,
+                    ckpt_dir=args.ckpt_dir or "/tmp/repro_train_ckpt")
+    reshaper = None
+    if args.reshape and lm.n_moe_layers(cfg):
+        reshaper = MoEReshaper(cfg, lm.n_moe_layers(cfg),
+                               ep_ranks=args.ep_ranks,
+                               params=SkewParams(eta=0.0, tau=0.2))
+    if args.resume:
+        loop = TrainLoop.recover(cfg, stream, hyper, lc, reshaper=reshaper)
+        print(f"recovered at step {int(loop.state['step'])}")
+    else:
+        loop = TrainLoop(cfg, stream, hyper, lc, reshaper=reshaper)
+    t0 = time.time()
+    hist = loop.run(args.steps)
+    dt = time.time() - t0
+    for h in hist[:: max(1, len(hist) // 20)]:
+        extra = ""
+        if "dropped" in h:
+            extra = f" dropped={int(h['dropped'].sum())}"
+        print(f"step {h['step']:5d} loss {h['loss']:.4f} "
+              f"gnorm {h['grad_norm']:.2f}{extra}")
+    print(f"\n{len(hist)} steps in {dt:.1f}s "
+          f"({len(hist) / max(dt, 1e-9):.2f} steps/s)")
+    if reshaper is not None:
+        print(f"reshape iterations: {reshaper.iterations}; "
+              f"events: {len(reshaper.events)}")
+
+
+if __name__ == "__main__":
+    main()

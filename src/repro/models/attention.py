@@ -1,0 +1,116 @@
+"""GQA attention.
+
+The training/prefill path is a *chunked online-softmax* implementation (a
+flash-attention-equivalent in pure jnp, O(S·chunk) memory instead of O(S²)) —
+this is both what the CPU dry-run lowers and the numerical oracle for the
+Pallas TPU kernel in ``repro.kernels.flash_attention``.  Supports causal,
+sliding-window (gemma3 local layers), cross-attention (whisper), and
+single-token decode against a (possibly rolling) KV cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k, n_rep: int):
+    """[B,S,KH,hd] -> [B,S,KH*n_rep,hd]."""
+    if n_rep == 1:
+        return k
+    b, s, kh, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, n_rep, hd)).reshape(
+        b, s, kh * n_rep, hd)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None,
+                      q_offset=0, kv_chunk: int = 1024):
+    """q [B,Sq,H,hd]; k,v [B,Sk,KH,hd].  Online-softmax over KV chunks.
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill: 0 with
+    Sq == Sk; decode: pos).  ``window``: sliding window size (None = full).
+    """
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    q = q * (hd ** -0.5)
+    k = repeat_kv(k, h // kh)
+    v = repeat_kv(v, h // kh)
+
+    kv_chunk = min(kv_chunk, sk)
+    n_chunks = -(-sk // kv_chunk)
+    pad = n_chunks * kv_chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, h, hd).transpose(1, 0, 3, 2, 4)
+
+    qt = q.transpose(0, 2, 1, 3)                      # [B,H,Sq,hd]
+    q_pos = q_offset + jnp.arange(sq)                 # absolute q positions
+
+    def body(carry, inputs):
+        m, l, acc, idx = carry
+        kb, vb = inputs                               # [B,H,C,hd]
+        k_pos = idx * kv_chunk + jnp.arange(kv_chunk)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qt, kb,
+                            preferred_element_type=jnp.float32)
+        mask = (k_pos[None, :] < sk)                  # padding
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+        return (m_new, l_new, acc_new, idx + 1), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, 0), (kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B,Sq,H,hd]
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: Optional[int] = None,
+                     rolling: bool = False):
+    """Single-token decode.  q [B,1,H,hd]; caches [B,Smax,KH,hd]; ``pos`` is
+    the absolute position of the new token (already written to the cache).
+
+    ``rolling``: cache stores entries at (abs_pos % Smax) — used for
+    sliding-window layers where Smax == window.
+    """
+    b, _, h, hd = q.shape
+    smax, kh = k_cache.shape[1], k_cache.shape[2]
+    if k_cache.dtype not in (jnp.float32, jnp.bfloat16, jnp.float16):
+        k_cache = k_cache.astype(jnp.bfloat16)   # fp8 KV cache dequant
+        v_cache = v_cache.astype(jnp.bfloat16)
+    k = repeat_kv(k_cache, h // kh)
+    v = repeat_kv(v_cache, h // kh)
+    q = q * (hd ** -0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    idx = jnp.arange(smax)
+    if rolling:
+        # entries idx hold absolute positions p with p % smax == idx and
+        # p <= pos and p > pos - smax -> all entries valid once warm; mask
+        # the not-yet-written ones when pos+1 < smax.
+        valid = idx <= pos if True else None
+        valid = jnp.where(pos + 1 >= smax, jnp.ones_like(idx, bool), idx <= pos)
+    else:
+        valid = idx <= pos
+        if window is not None:
+            valid = valid & (idx > pos - window)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+    return out.astype(q.dtype)

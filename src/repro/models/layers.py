@@ -1,0 +1,75 @@
+"""Shared neural layers: RMSNorm, RoPE (incl. M-RoPE), gated MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return out * gamma.astype(x.dtype)
+
+
+def _rope_angles(positions, head_dim, theta):
+    """positions [..., S] -> (cos, sin) [..., S, head_dim/2]."""
+    freqs = theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32)
+                      / (head_dim // 2))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x [B,S,H,hd]; positions [B,S] (int).  Rotate-half convention."""
+    hd = x.shape[-1]
+    cos, sin = _rope_angles(positions, hd, theta)    # [B,S,hd/2]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# Qwen2-VL multimodal rotary: the head_dim/2 frequency dims are partitioned
+# into 3 sections driven by (t, h, w) position ids respectively.
+MROPE_SECTIONS = (2, 3, 3)   # ratios; scaled to head_dim//2 at call time
+
+
+def apply_mrope(x, positions3, theta=1_000_000.0):
+    """x [B,S,H,hd]; positions3 [B,S,3] (t,h,w ids)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    total = sum(MROPE_SECTIONS)
+    bounds = []
+    acc = 0
+    for s in MROPE_SECTIONS[:-1]:
+        acc += round(half * s / total)
+        bounds.append(acc)
+    # section id per frequency index
+    sec = jnp.zeros((half,), jnp.int32)
+    for i, b in enumerate(bounds):
+        sec = sec + (jnp.arange(half) >= b).astype(jnp.int32)
+    # pick the position component per frequency
+    pos = jnp.take_along_axis(
+        positions3[..., None, :], sec[None, None, :, None], axis=-1
+    )[..., 0]                                        # [B,S,half]
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """Gated MLP: silu(x@Wg) * (x@Wu) @ Wd."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype)))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", g * u, w_down.astype(x.dtype))
+
+
+def sinusoidal_positions(seq, dim):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * i / dim))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,71 @@
+"""Declarative parameter system.
+
+A model is declared as a nested dict of ``ParamDef``s (shape + logical axes +
+init law).  From one declaration we derive (a) initialized parameter pytrees,
+(b) ``jax.ShapeDtypeStruct`` trees for allocation-free dry-run lowering, and
+(c) ``PartitionSpec`` trees via the logical-axis rules in
+``repro.runtime.sharding`` — a single source of truth, no bookkeeping drift.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamDef(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis name per dim (None = replicated)
+    init: str = "normal"              # normal | zeros | ones | embed
+    dtype: Any = jnp.float32
+
+    def fan_in(self) -> int:
+        # last-but-one dim is the contraction dim for our matmuls
+        return self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+
+
+def stacked(n: int, d: ParamDef) -> ParamDef:
+    """Prepend a layer-stacking dim (logical axis 'layers')."""
+    return ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init, d.dtype)
+
+
+def is_def_tree_leaf(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def map_defs(fn, defs):
+    return jax.tree.map(fn, defs, is_leaf=is_def_tree_leaf)
+
+
+def init_params(defs, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def_tree_leaf)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        elif d.init == "embed":
+            out.append(jax.random.normal(k, d.shape, dtype) * 0.02)
+        else:
+            scale = 1.0 / math.sqrt(max(1, d.fan_in()))
+            out.append(jax.random.normal(k, d.shape, dtype) * scale)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs, dtype=jnp.float32):
+    """ShapeDtypeStructs — for .lower() without allocating anything."""
+    return map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs)
+
+
+def param_specs(defs, rules: Dict[str, Optional[str]]):
+    """PartitionSpec tree from logical-axis -> mesh-axis rules."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec(d: ParamDef):
+        return P(*[rules.get(a) if a is not None else None for a in d.axes])
+
+    return map_defs(spec, defs)

@@ -1,0 +1,237 @@
+"""Interactive training loop — the Amber worker on the ML runtime.
+
+Granulated iteration (paper §2.4.3): the loop polls the controller mailbox
+between *microbatches*, so Pause/Inspect/Update take effect within one
+microbatch; while paused it keeps answering Inspect/Update (§2.4.4).
+Local breakpoints are checked on every microbatch's metrics; global COUNT
+breakpoints accumulate across shards/steps.  Reshape (MoEReshaper) observes
+the free load metrics and swaps the routing plan + migrates expert state
+between steps.  Fault tolerance: checkpoints carry the data-iterator state
+and the control-replay log; ``TrainLoop.recover`` restores and re-applies
+logged messages at their recorded (step, microbatch) points -> bit-exact
+continuation (§2.6.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ArchConfig
+from repro.core.breakpoints import GlobalCountBreakpoint, LocalBreakpoint
+from repro.core.controller import Controller, ReplayingController
+from repro.core.reshape_moe import MoEReshaper
+from repro.data.synthetic import TokenStream
+from repro.models import lm
+from repro.models import moe as moe_lib
+from repro.runtime.train import TrainHyper, build_grad_step, make_state
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    microbatches: int = 2
+    ckpt_every: int = 0                  # 0 = off
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    lr_scale: float = 1.0
+
+
+class TrainLoop:
+    def __init__(self, cfg: ArchConfig, stream: TokenStream,
+                 hyper: TrainHyper = TrainHyper(),
+                 loop_cfg: LoopConfig = LoopConfig(),
+                 controller: Optional[Controller] = None,
+                 reshaper: Optional[MoEReshaper] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.stream = stream
+        self.hyper = hyper
+        self.lc = loop_cfg
+        self.controller = controller or Controller()
+        self.reshaper = reshaper
+        self.state = make_state(cfg, jax.random.PRNGKey(seed))
+        self.grad_mb, self.apply, self.migrate = build_grad_step(cfg, hyper)
+        nl = lm.n_moe_layers(cfg)
+        if nl:
+            plan = moe_lib.identity_plan(cfg, nl)
+            self.plan_slots = np.asarray(plan.slots)
+            self.plan_cum = np.asarray(plan.cum)
+            if reshaper is not None:
+                self.plan_slots = reshaper.plan_slots.copy()
+                self.plan_cum = reshaper.plan_cum.copy()
+        else:
+            self.plan_slots = self.plan_cum = None
+        self.local_bps: List[LocalBreakpoint] = []
+        self.global_bps: List[GlobalCountBreakpoint] = []
+        self.history: List[Dict[str, Any]] = []
+        self.ckpt = Checkpointer(self.lc.ckpt_dir) if self.lc.ckpt_every \
+            else None
+        if self.ckpt is not None and self.controller.durable_log_path is None:
+            import os
+            self.controller.attach_durable_log(
+                os.path.join(self.lc.ckpt_dir, "control.log"))
+        self.hit_breakpoints: List[str] = []
+
+    # ------------------------------------------------------------- plumbing
+    def _inspect(self, what: str):
+        step = int(self.state["step"])
+        info = {"step": step, "stream": self.stream.state(),
+                "paused": self.controller.paused,
+                "history_tail": self.history[-3:]}
+        if what == "plan" and self.plan_slots is not None:
+            info["plan_slots"] = self.plan_slots.tolist()
+        return info
+
+    def _apply_updates(self, updates: Dict[str, Any]) -> None:
+        if "lr_scale" in updates:
+            self.lc.lr_scale = float(updates["lr_scale"])
+        if "tau" in updates and self.reshaper is not None:
+            self.reshaper.params.tau = float(updates["tau"])
+
+    def _poll(self, step: int, mb: int) -> bool:
+        r = self.controller.poll(step, mb, self._inspect)
+        self._apply_updates(r["updates"])
+        if r["plan"] is not None:
+            self.plan_slots = np.asarray(r["plan"]["slots"])
+            self.plan_cum = np.asarray(r["plan"]["cum"])
+            if r["plan"]["migrations"]:
+                self._migrate(r["plan"]["migrations"])
+        for bp in self.controller.breakpoints:
+            if isinstance(bp, LocalBreakpoint):
+                self.local_bps.append(bp)
+            elif isinstance(bp, GlobalCountBreakpoint):
+                self.global_bps.append(bp)
+        self.controller.breakpoints = []
+        return r["stopped"]
+
+    def _migrate(self, migrations) -> None:
+        if not migrations:
+            return
+        arr = jnp.asarray([[m.layer, m.src_slot, m.dst_slot]
+                           for m in migrations], jnp.int32)
+        self.state = self.migrate(self.state, arr)
+
+    def _plan_args(self):
+        if self.plan_slots is None:
+            e = jnp.zeros((1, 1, 1), jnp.int32)
+            return e, jnp.ones((1, 1, 1), jnp.float32)
+        return jnp.asarray(self.plan_slots), jnp.asarray(self.plan_cum)
+
+    # ----------------------------------------------------------------- run
+    def run(self, steps: int) -> List[Dict[str, Any]]:
+        n_mb = self.lc.microbatches
+        for _ in range(steps):
+            step = int(self.state["step"])
+            if self._poll(step, 0):
+                break
+            batch = self.stream.next()
+            gb = batch["tokens"].shape[0]
+            mb_sz = gb // n_mb
+            grads = None
+            step_metrics: Dict[str, Any] = {}
+            paused_mid = False
+            for i in range(n_mb):
+                mbd = {"tokens": jnp.asarray(
+                    batch["tokens"][i * mb_sz:(i + 1) * mb_sz])}
+                if self.cfg.enc_layers:
+                    mbd["frames"] = jnp.zeros(
+                        (mb_sz, self.cfg.enc_seq, self.cfg.d_model),
+                        jnp.float32)
+                ps, pc = self._plan_args()
+                offset = (step * n_mb + i) * mb_sz * self.stream.seq_len
+                g, metrics = self.grad_mb(self.state["params"], mbd, ps, pc,
+                                          jnp.asarray(offset))
+                grads = g if grads is None else jax.tree.map(
+                    lambda a, b: a + b, grads, g)
+                m_host = {k: np.asarray(v) for k, v in metrics.items()}
+                step_metrics = _merge_metrics(step_metrics, m_host)
+                # --- Amber granulated control point (one per microbatch) ---
+                for bp in self.local_bps:
+                    if bp.check({k: v for k, v in m_host.items()
+                                 if np.ndim(v) == 0}):
+                        self.hit_breakpoints.append(bp.name)
+                        self.controller.paused = True
+                for bp in list(self.global_bps):
+                    if bp.update([float(mbd["tokens"].size)]):
+                        self.hit_breakpoints.append(bp.name)
+                        self.controller.paused = True
+                        # COUNT targets fire once (unlike local condition
+                        # breakpoints, which re-check every iteration)
+                        self.global_bps.remove(bp)
+                if self._poll(step, i + 1):
+                    paused_mid = True
+                    break
+            if paused_mid and self.controller.stopped:
+                break
+            self.state, opt_m = self.apply(self.state, grads, n_mb,
+                                           jnp.asarray(self.lc.lr_scale))
+            step_metrics.update({k: np.asarray(v) for k, v in opt_m.items()})
+            self.history.append({"step": step, **{
+                k: (float(v) if np.ndim(v) == 0 else v)
+                for k, v in step_metrics.items()}})
+            # ---------------- Reshape between-steps fast control path ------
+            if self.reshaper is not None and "expert_counts" in step_metrics:
+                self.reshaper.observe(step_metrics["expert_counts"],
+                                      step_metrics.get("dropped"))
+                ps, pc, migs = self.reshaper.step()
+                if migs:
+                    self._migrate(migs)
+                self.plan_slots, self.plan_cum = ps, pc
+            if self.ckpt and (step + 1) % self.lc.ckpt_every == 0:
+                self.save(step + 1)
+        return self.history
+
+    # -------------------------------------------------------- fault tolerance
+    def save(self, step: int) -> str:
+        extra = {"stream": self.stream.state(),
+                 "plan_slots": None if self.plan_slots is None
+                 else np.asarray(self.plan_slots),
+                 "plan_cum": None if self.plan_cum is None
+                 else np.asarray(self.plan_cum),
+                 "lr_scale": self.lc.lr_scale}
+        return self.ckpt.save(step, self.state, self.controller.log, extra)
+
+    @classmethod
+    def recover(cls, cfg: ArchConfig, stream: TokenStream,
+                hyper: TrainHyper, loop_cfg: LoopConfig,
+                reshaper: Optional[MoEReshaper] = None) -> "TrainLoop":
+        import os
+        ckpt = Checkpointer(loop_cfg.ckpt_dir)
+        payload = ckpt.restore()
+        assert payload is not None, "no checkpoint to recover from"
+        step = payload["step"]
+        # the coordinator's durable log survives the crash (§2.6.2 A1) and
+        # includes messages applied after the checkpoint was taken
+        durable = Controller.read_durable_log(
+            os.path.join(loop_cfg.ckpt_dir, "control.log"))
+        records = durable or payload["control_log"]
+        controller = ReplayingController(
+            [r for r in records if r.step >= step])
+        loop = cls(cfg, stream, hyper, loop_cfg, controller=controller,
+                   reshaper=reshaper)
+        loop.state = jax.tree.map(jnp.asarray, payload["state"])
+        loop.stream.restore(payload["extra"]["stream"])
+        loop.lc.lr_scale = payload["extra"]["lr_scale"]
+        if payload["extra"]["plan_slots"] is not None:
+            loop.plan_slots = payload["extra"]["plan_slots"]
+            loop.plan_cum = payload["extra"]["plan_cum"]
+        # replayed messages were already logged pre-crash; keep the old log
+        loop.controller.log = list(records)
+        return loop
+
+
+def _merge_metrics(acc: Dict[str, Any], new: Dict[str, Any]) -> Dict[str, Any]:
+    out = dict(acc)
+    for k, v in new.items():
+        if k not in out:
+            out[k] = v
+        elif np.ndim(v) == 0:
+            out[k] = (out[k] + v) / 2 if k in ("ce", "loss", "aux_loss") \
+                else out[k] + v
+        else:
+            out[k] = out[k] + v
+    return out

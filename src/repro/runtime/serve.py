@@ -1,0 +1,73 @@
+"""Serve-step builder: single-token batched decode against KV/SSM caches
+(what ``decode_32k`` / ``long_500k`` lower), plus a host-side batched
+serving loop with prefill-as-decode and temperature sampling."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.models import lm
+from repro.models import moe as moe_lib
+
+
+def build_serve_step(cfg: ArchConfig, mesh=None, tokens_sharded=True):
+    nl_moe = lm.n_moe_layers(cfg)
+
+    def serve_step(params, state, token, plan_slots=None, plan_cum=None):
+        plan = None
+        if nl_moe and plan_slots is not None:
+            plan = moe_lib.RoutingPlan(plan_slots, plan_cum)
+        return lm.decode_step(params, state, token, cfg, plan=plan,
+                              mesh=mesh, tokens_sharded=tokens_sharded)
+
+    return serve_step
+
+
+def abstract_serve_inputs(cfg: ArchConfig, shape: ShapeCfg, kv_dtype=None):
+    """ShapeDtypeStruct stand-ins: cache at seq_len, one new token.
+    eval_shape — a 550 GB KV cache must never materialize on the host."""
+    cache_abs = jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len,
+                              kv_dtype))
+    token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    return cache_abs, token
+
+
+def sample(logits: jnp.ndarray, key, temperature: float = 0.8):
+    if temperature <= 0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+class BatchedServer:
+    """Small host-side serving loop (examples + tests): requests are batched,
+    prefill runs token-by-token through the decode path (smoke scale), and
+    decode emits until max_tokens."""
+
+    def __init__(self, cfg: ArchConfig, params, max_len: int = 128):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._step = jax.jit(build_serve_step(cfg))
+
+    def generate(self, prompts: np.ndarray, max_new: int = 16,
+                 temperature: float = 0.0, seed: int = 0):
+        b, plen = prompts.shape
+        state = lm.init_cache(self.cfg, b, self.max_len)
+        logits = None
+        for i in range(plen):
+            logits, state = self._step(self.params, state,
+                                       jnp.asarray(prompts[:, i:i + 1]))
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = sample(logits, key, temperature)[:, None]
+        for i in range(max_new):
+            out.append(np.asarray(tok))
+            logits, state = self._step(self.params, state, tok)
+            key, sub = jax.random.split(key)
+            tok = sample(logits, sub, temperature)[:, None]
+        return np.concatenate(out, axis=1)

@@ -1,0 +1,151 @@
+"""Sharding rules: logical param axes -> mesh axes, batch/cache specs.
+
+Baseline layout (DESIGN.md §5): 2-D sharding — every big matrix splits its
+output dim over ``model`` (Megatron-style TP via GSPMD propagation) and its
+input/embed dim over ``data`` (+``pod``) (FSDP/ZeRO-style full sharding, so
+104B-param command-r fits: params+grads+adam fp32 ~18 bytes/param over 512
+chips ≈ 3.7 GB/chip).  Non-divisible dims fall back to replication per leaf
+(e.g. whisper's vocab 51865).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.models.params import ParamDef, is_def_tree_leaf, map_defs
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def logical_rules(mesh: Mesh, fsdp: bool = True) -> Dict[str, object]:
+    return {
+        "vocab": "model",
+        "embed": data_axes(mesh) if fsdp else None,
+        "qkv": "model",
+        "mlp": "model",
+        "experts": "model",
+        "layers": None,
+    }
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, fsdp: bool = True):
+    """PartitionSpec tree with per-leaf divisibility fallback."""
+    from repro.models.lm import model_defs
+    rules = logical_rules(mesh, fsdp)
+
+    def spec(d: ParamDef):
+        parts = []
+        for dim, ax in zip(d.shape, d.axes):
+            target = rules.get(ax) if ax is not None else None
+            if target is None:
+                parts.append(None)
+            elif dim % axis_size(mesh, target) == 0:
+                parts.append(target)
+            else:
+                parts.append(None)           # non-divisible -> replicate
+        return P(*parts)
+
+    return map_defs(spec, model_defs(cfg))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
+                layout: str = "tp"):
+    da = data_axes(mesh)
+    if layout == "dp":
+        full = da + ("model",)
+        if shape.global_batch % axis_size(mesh, full) == 0:
+            da = full
+    dp = axis_size(mesh, da)
+    seq_sharded = shape.global_batch < dp        # long_500k: batch of 1
+    tok = P(None, da) if seq_sharded else P(da, None)
+    out = {"tokens": tok}
+    if cfg.enc_layers:
+        out["frames"] = P(da, None, None) if not seq_sharded else P(None, None, None)
+    if cfg.mrope:
+        out["positions3"] = P(da, None, None) if not seq_sharded else \
+            P(None, None, None)
+    return out
+
+
+def _model_dim_part(mesh: Mesh, *dims):
+    """Pick the first dim (by index into ``dims``) divisible by |model|."""
+    m = axis_size(mesh, "model")
+    for i, d in enumerate(dims):
+        if d % m == 0:
+            return i
+    return None
+
+
+def act_spec_for(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
+                 layout: str = "tp"):
+    """PartitionSpec for [B, S, D] activations under the given layout."""
+    da = data_axes(mesh)
+    if layout == "dp":
+        full = da + ("model",)
+        if shape.global_batch % axis_size(mesh, full) == 0:
+            return P(full, None, None)
+    if shape.global_batch < axis_size(mesh, da):
+        return P(None, da, None)
+    return P(da, None, None)
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, shape: ShapeCfg, cache_tree,
+                force_seq_shard: bool = False):
+    """Spec tree matching lm.init_cache output.  decode_*: batch over data;
+    long_500k (batch < dp): KV sequence over data, SSM state over model.
+    ``force_seq_shard``: decode2d layout — weights 2-D sharded, cache
+    sequence-sharded, batch replicated (weight-stationary decode)."""
+    da = data_axes(mesh)
+    dp = axis_size(mesh, da)
+    seq_sharded = shape.global_batch < dp or force_seq_shard
+    KV_TYPES = ("attn", "local", "moe", "shared_attn", "dec")
+
+    def leaf_spec(path, x):
+        btype = path[0].key if hasattr(path[0], "key") else str(path[0])
+        shp = x.shape
+        nd = len(shp)
+        batch = None if seq_sharded else da
+        if btype in KV_TYPES and nd == 5:     # [n, B, S, KH, hd]
+            i = _model_dim_part(mesh, shp[3], shp[4])
+            kv = [None, None]
+            if i is not None:
+                kv[i] = "model"
+            seq = da if seq_sharded else None
+            return P(None, batch, seq, *kv)
+        if nd >= 4:                           # SSM states: [n,B,H,...] etc.
+            i = _model_dim_part(mesh, *shp[2:])
+            tail = [None] * (nd - 2)
+            if i is not None:
+                tail[i] = "model"
+            return P(None, batch, *tail)
+        if nd == 3:                           # x_tm/x_cm [n, B, D]
+            return P(None, batch, None)
+        return P(*([None] * nd))
+
+    caches = jax.tree_util.tree_map_with_path(leaf_spec, cache_tree["caches"])
+    return {"caches": caches, "pos": P()}
+
+
+def opt_state_specs(param_spec_tree):
+    from repro.optim.adamw import OptState
+    return OptState(param_spec_tree, param_spec_tree, P())
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

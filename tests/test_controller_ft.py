@@ -1,0 +1,151 @@
+"""Amber control plane: pause/resume/inspect semantics, sub-microbatch
+latency, control-replay-log fault tolerance (bit-exact recovery)."""
+import os
+import shutil
+import threading
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get_arch
+from repro.core import messages as M
+from repro.core.controller import Controller
+from repro.core.breakpoints import (GlobalCountBreakpoint, LocalBreakpoint,
+                                    run_global_target_protocol)
+from repro.data.synthetic import TokenStream
+from repro.runtime.loop import LoopConfig, TrainLoop
+from repro.runtime.train import TrainHyper
+
+
+def mk_loop(tmp, arch="olmoe-1b-7b", ckpt_every=0, controller=None,
+            reshaper=None):
+    cfg = get_arch(arch + "-smoke")
+    stream = TokenStream(vocab=cfg.vocab, seq_len=16, global_batch=4, seed=3)
+    return TrainLoop(cfg, stream,
+                     TrainHyper(),
+                     LoopConfig(microbatches=2, ckpt_every=ckpt_every,
+                                ckpt_dir=tmp),
+                     controller=controller, reshaper=reshaper)
+
+
+def test_pause_resume_inspect_while_paused(tmp_path):
+    loop = mk_loop(str(tmp_path))
+    ctl = loop.controller
+
+    def driver():
+        time.sleep(0.3)
+        ctl.send(M.pause()).wait(30)
+        # inspect WHILE PAUSED (the Amber §2.4.4 capability)
+        info = ctl.send(M.inspect()).wait(30)
+        assert info["paused"]
+        ctl.send(M.update(lr_scale=0.5)).wait(30)
+        ctl.send(M.resume()).wait(30)
+
+    th = threading.Thread(target=driver)
+    th.start()
+    loop.run(6)
+    th.join()
+    assert loop.lc.lr_scale == 0.5
+    kinds = [r.kind for r in ctl.log]
+    assert kinds.count("pause") == 1 and kinds.count("resume") == 1
+    # pause took effect within one microbatch of wall time
+    assert ctl.pause_latency and ctl.pause_latency[0] < 30.0
+
+
+def test_local_breakpoint_pauses():
+    cfg = get_arch("gemma3-1b-smoke")
+    stream = TokenStream(vocab=cfg.vocab, seq_len=8, global_batch=2)
+    loop = TrainLoop(cfg, stream, TrainHyper(), LoopConfig(microbatches=1))
+    ctl = loop.controller
+    ctl.send(M.set_breakpoint(LocalBreakpoint("always",
+                                              lambda m: m["loss"] > 0)))
+
+    def resumer():
+        time.sleep(1.0)
+        while not ctl.paused:
+            time.sleep(0.1)
+        ctl.send(M.stop())
+
+    th = threading.Thread(target=resumer)
+    th.start()
+    loop.run(10)
+    th.join()
+    assert "always" in loop.hit_breakpoints
+
+
+def test_global_count_breakpoint():
+    cfg = get_arch("gemma3-1b-smoke")
+    stream = TokenStream(vocab=cfg.vocab, seq_len=8, global_batch=2)
+    loop = TrainLoop(cfg, stream, TrainHyper(), LoopConfig(microbatches=1))
+    bp = GlobalCountBreakpoint("tokens", "tokens", target=3 * 16)
+    loop.global_bps.append(bp)
+
+    def stopper():
+        while not loop.controller.paused:
+            time.sleep(0.05)
+        loop.controller.send(M.stop())
+
+    th = threading.Thread(target=stopper)
+    th.start()
+    loop.run(20)
+    th.join()
+    assert "tokens" in loop.hit_breakpoints
+    # paused within one microbatch of the target
+    assert bp._total >= bp.target
+    assert bp._total - bp.target <= 16
+
+
+def test_global_target_protocol_tau_tradeoff():
+    # Fig 2.13: higher tau -> more sync time; tiny tau -> best overall
+    rates = [10.0, 7.0, 5.0]
+    res_small = run_global_target_protocol(1000, rates, tau=0.01)
+    res_big = run_global_target_protocol(1000, rates, tau=5.0)
+    assert res_small.sync_time < res_big.sync_time
+    assert res_small.total_time <= res_big.total_time
+    assert res_small.produced >= 1000
+
+
+def test_sum_predicate_single_worker_endgame_reduces_overshoot():
+    rates = [10.0, 9.0, 8.0]
+    vals = [15.0, 12.0, 10.0]
+    with_endgame = run_global_target_protocol(
+        1000, rates, tau=0.1, values_per_tuple=vals,
+        single_worker_threshold=50)
+    without = run_global_target_protocol(
+        1000, rates, tau=0.1, values_per_tuple=vals,
+        single_worker_threshold=0)
+    assert with_endgame.overshoot <= without.overshoot + 1e-9
+
+
+def test_fault_tolerance_bit_exact_recovery(tmp_path):
+    """Run A: 8 steps with an lr update at step 4 (logged), checkpoint@4.
+    Run B: same but 'crash' after step 6, recover from ckpt, replay, finish.
+    Final params must be bit-identical."""
+    d = str(tmp_path / "ft")
+
+    # --- reference uninterrupted run
+    loopA = mk_loop(d + "_a", ckpt_every=4)
+    loopA.run(4)
+    loopA.controller.send(M.update(lr_scale=0.25))
+    loopA.run(4)
+    ref = jax.tree.leaves(loopA.state["params"])
+
+    # --- crashing run with identical message schedule
+    loopB = mk_loop(d + "_b", ckpt_every=4)
+    loopB.run(4)                      # checkpoint at step 4 (message BEFORE
+    loopB.controller.send(M.update(lr_scale=0.25))   # any step>4 data)
+    loopB.run(2)                      # crash "after step 6"
+    del loopB
+
+    cfg = get_arch("olmoe-1b-7b-smoke")
+    stream = TokenStream(vocab=cfg.vocab, seq_len=16, global_batch=4, seed=3)
+    loopC = TrainLoop.recover(cfg, stream, TrainHyper(),
+                              LoopConfig(microbatches=2, ckpt_every=4,
+                                         ckpt_dir=d + "_b"))
+    assert int(loopC.state["step"]) == 4
+    loopC.run(4)                      # replays the update at its logged point
+    assert loopC.lc.lr_scale == 0.25
+    got = jax.tree.leaves(loopC.state["params"])
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,140 @@
+"""MoE + RoutingPlan semantics: plan-driven splits, state-migration +
+plan-swap equivalence, reshaper convergence on skewed loads."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.core.reshape_moe import (Migration, MoEReshaper, SlotLayout,
+                                    apply_migrations_np)
+from repro.core.skew import SkewParams
+from repro.models import lm
+from repro.models import moe as moe_lib
+
+CFG = get_arch("olmoe-1b-7b-smoke")     # 8 experts, top-2, 2 spare slots
+
+
+def _params(key=0):
+    return lm.init(CFG, jax.random.PRNGKey(key))
+
+
+def _moe_block_params(params):
+    # single moe layer slice
+    return {k: v[0] for k, v in params["moe"].items()}
+
+
+def test_identity_plan_routes_home():
+    plan = moe_lib.identity_plan(CFG, 1)
+    p = _moe_block_params(_params())
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, CFG.d_model))
+    y, m = moe_lib.moe_ffn(p, x, plan.slots[0], plan.cum[0], CFG)
+    # spare slots (8,9) receive nothing under the identity plan
+    assert np.asarray(m["slot_counts"])[8:].sum() == 0
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_sbr_split_fraction_obeyed():
+    e, r = CFG.moe.num_experts, CFG.moe.max_replicas
+    plan = moe_lib.identity_plan(CFG, 1)
+    slots = np.asarray(plan.slots).copy()
+    cum = np.asarray(plan.cum).copy()
+    # split expert 0: 50% to spare slot 8, rest stays home
+    slots[0, 0, 0] = 8
+    slots[0, 0, 1:] = 0
+    cum[0, 0, :] = 1.0
+    cum[0, 0, 0] = 0.5
+    p = _moe_block_params(_params())
+    x = jax.random.normal(jax.random.PRNGKey(2), (512, CFG.d_model))
+    y, m = moe_lib.moe_ffn(p, x, jnp.asarray(slots[0]), jnp.asarray(cum[0]),
+                           CFG)
+    counts = np.asarray(m["slot_counts"])
+    routed_0 = counts[0] + counts[8]
+    if routed_0 > 20:
+        frac = counts[8] / routed_0
+        assert 0.3 < frac < 0.7          # ~50% split via hashing
+
+
+def test_migration_plus_split_preserves_function():
+    """SBR correctness: copying expert-0 state into the spare slot and
+    splitting its tokens gives the SAME outputs as no mitigation."""
+    params = _params()
+    p = _moe_block_params(params)
+    # migrate expert 0 -> slot 8 (numpy reference migration)
+    p2 = {k: (np.asarray(v).copy() if k != "router" else np.asarray(v))
+          for k, v in p.items()}
+    for k in ("w_gate", "w_up", "w_down"):
+        p2[k][8] = p2[k][0]
+    plan = moe_lib.identity_plan(CFG, 1)
+    slots = np.asarray(plan.slots).copy()
+    cum = np.asarray(plan.cum).copy()
+    slots[0, 0, 0] = 8
+    slots[0, 0, 1:] = 0
+    cum[0, 0, 0] = 0.5
+    x = jax.random.normal(jax.random.PRNGKey(3), (256, CFG.d_model))
+    y_base, mb = moe_lib.moe_ffn(p, x, plan.slots[0], plan.cum[0], CFG)
+    y_split, ms = moe_lib.moe_ffn(
+        {k: jnp.asarray(v) for k, v in p2.items()}, x,
+        jnp.asarray(slots[0]), jnp.asarray(cum[0]), CFG)
+    if int(mb["dropped"]) == 0 and int(ms["dropped"]) == 0:
+        np.testing.assert_allclose(np.asarray(y_base), np.asarray(y_split),
+                                   atol=1e-4, rtol=1e-3)
+
+
+def test_slot_layout_invariants():
+    lay = SlotLayout(num_experts=64, ep_ranks=16)
+    assert lay.slots_per_rank == 5 and lay.num_slots == 80
+    for e in range(64):
+        s = lay.home_slot(e)
+        assert lay.rank_of_slot(s) == lay.rank_of_expert(e)
+    spares = {lay.spare_slot(r) for r in range(16)}
+    homes = {lay.home_slot(e) for e in range(64)}
+    assert not (spares & homes)
+    assert len(spares | homes) == 80
+
+
+def test_reshaper_mitigates_synthetic_skew():
+    cfg = get_arch("olmoe-1b-7b")
+    rs = MoEReshaper(cfg, n_moe_layers=2, ep_ranks=16,
+                     params=SkewParams(eta=0.0, tau=0.2), phase1_steps=1)
+    rng = np.random.default_rng(0)
+    e = cfg.moe.num_experts
+
+    def skewed_counts():
+        c = rng.integers(50, 100, (2, e)).astype(float)
+        c[:, 0] = 4000.0                 # expert 0 (rank 0) red hot
+        return c
+
+    before = None
+    for step in range(8):
+        rs.observe(skewed_counts())
+        slots, cum, migs = rs.step()
+        if step == 0:
+            before = rs.rank_loads(0).copy()
+            # the hot expert must have been split or moved with migration
+            assert migs, "expected a state migration for the hot expert"
+    after = rs.rank_loads(0)
+    assert after.max() < before.max()    # peak load reduced
+    lb_before = before.min() / before.max()
+    lb_after = after.min() / after.max()
+    assert lb_after > lb_before
+
+
+def test_apply_migrations_np():
+    leaf = np.arange(2 * 4 * 3).reshape(2, 4, 3).astype(float)
+    out = apply_migrations_np(leaf, [Migration(1, 0, 3)])
+    np.testing.assert_array_equal(out[1, 3], leaf[1, 0])
+    np.testing.assert_array_equal(out[0], leaf[0])
+
+
+def test_runtime_migrate_matches_numpy():
+    from repro.runtime.train import TrainHyper, build_grad_step, make_state
+    state = make_state(CFG, jax.random.PRNGKey(0))
+    _, _, migrate = build_grad_step(CFG, TrainHyper())
+    arr = jnp.asarray([[0, 1, 9], [1, 2, 8]], jnp.int32)
+    new_state = migrate(state, arr)
+    for k in ("w_gate", "w_up", "w_down"):
+        ref = apply_migrations_np(np.asarray(state["params"]["moe"][k]),
+                                  [Migration(0, 1, 9), Migration(1, 2, 8)])
+        np.testing.assert_array_equal(
+            np.asarray(new_state["params"]["moe"][k]), ref)

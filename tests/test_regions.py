@@ -1,0 +1,120 @@
+"""Maestro: regions, region graph, cycle repair, materialization
+enumeration, result-aware FRT choice (paper Ch. 4)."""
+import pytest
+
+from repro.core.materialization import conflicts, enumerate_choices
+from repro.core.regions import (Op, Workflow, is_schedulable, region_graph,
+                                regions, schedule)
+from repro.core.scheduler import (CostModel, cardinalities, choose,
+                                  first_response_time, materialized_bytes,
+                                  remat_policy)
+
+
+def fig41() -> Workflow:
+    """Scan -> (F1 -> Join.build[blocking], F2 -> Join.probe) -> Sink."""
+    wf = Workflow()
+    for op in [Op("scan", "scan", 1.0, 1.0, 1000),
+               Op("f1", "filter", 1.0, 0.5), Op("f2", "filter", 1.0, 0.5),
+               Op("join", "join", 2.0, 1.0), Op("sink", "sink", 0.1, 1.0)]:
+        wf.add_op(op)
+    wf.add_edge("scan", "f1").add_edge("scan", "f2")
+    wf.add_edge("f1", "join", blocking=True, port="build")
+    wf.add_edge("f2", "join", port="probe")
+    wf.add_edge("join", "sink")
+    return wf
+
+
+def chain() -> Workflow:
+    wf = Workflow()
+    for op in [Op("scan", "scan", 1.0, 1.0, 100),
+               Op("sort", "sort", 1.0, 1.0), Op("sink", "sink", 0.1)]:
+        wf.add_op(op)
+    wf.add_edge("scan", "sort", blocking=True)
+    wf.add_edge("sort", "sink")
+    return wf
+
+
+def test_regions_split_at_blocking_edges():
+    wf = chain()
+    regs = regions(wf)
+    assert len(regs) == 2
+    assert is_schedulable(wf)
+    order = schedule(wf)
+    assert "scan" in order[0] and "sink" in order[1]
+
+
+def test_fig41_unschedulable_until_materialized():
+    wf = fig41()
+    assert not is_schedulable(wf)
+    confs = conflicts(wf)
+    assert len(confs) == 1
+    choices = enumerate_choices(wf)
+    # the two choices discussed in §4.1: scan->f2 (AsterixDB heuristic)
+    # and f2->join
+    assert frozenset({("scan", "f2")}) in choices
+    assert frozenset({("f2", "join")}) in choices
+    for c in choices:
+        assert is_schedulable(wf.materialize(c))
+
+
+def test_result_aware_choice_minimizes_frt():
+    wf = fig41()
+    cm = CostModel()
+    best, info = choose(wf, cm)
+    frts = {tuple(sorted(c)): f for f, b, c in info["all"]}
+    assert first_response_time(wf, best, cm) == min(
+        first_response_time(wf, c, cm) for c in enumerate_choices(wf))
+    # the min-FRT choice here keeps f2's work pipelined with the sink
+    assert best == frozenset({("scan", "f2")})
+    # and it pays more materialized bytes — the paper's trade-off
+    assert materialized_bytes(wf, best, cm) > materialized_bytes(
+        wf, frozenset({("f2", "join")}), cm)
+
+
+def test_two_join_workflow_choice_product():
+    """Fig 4.11-style: two joins each with a replicated source conflict."""
+    wf = Workflow()
+    for name, kind, cost, sel, card in [
+            ("s", "scan", 1, 1, 1000), ("d1", "replicate", 0.1, 2, 0),
+            ("f", "filter", 1, 0.5, 0), ("j1", "join", 2, 1, 0),
+            ("d2", "replicate", 0.1, 2, 0), ("m", "ml", 5, 1, 0),
+            ("j2", "join", 2, 1, 0), ("sink", "sink", 0.1, 1, 0)]:
+        wf.add_op(Op(name, kind, cost, sel, card))
+    wf.add_edge("s", "d1")
+    wf.add_edge("d1", "f").add_edge("d1", "j1", blocking=True, port="build")
+    wf.add_edge("f", "j1", port="probe")
+    wf.add_edge("j1", "d2")
+    wf.add_edge("d2", "m").add_edge("d2", "j2", blocking=True, port="build")
+    wf.add_edge("m", "j2", port="probe")
+    wf.add_edge("j2", "sink")
+    assert not is_schedulable(wf)
+    choices = enumerate_choices(wf)
+    assert len(choices) >= 4            # >=2 cuts per conflict, cross product
+    for c in choices:
+        assert is_schedulable(wf.materialize(c))
+    best, info = choose(wf, CostModel())
+    assert is_schedulable(wf.materialize(best))
+
+
+def test_cardinality_propagation():
+    wf = fig41()
+    cards = cardinalities(wf)
+    assert cards["scan"] == 1000
+    assert cards["f1"] == 500
+    assert cards["join"] == 1000        # sel 1.0 * (500 + 500)
+
+
+def test_remat_policy_result_aware():
+    from repro.configs import get_arch
+    cfg = get_arch("yi-34b")
+    # tight memory -> full remat chosen; loose -> none
+    tight, _ = remat_policy(cfg, None, hbm_bytes_per_device=1e9,
+                            act_bytes_per_layer={"none": 1e9, "dots": 1e8,
+                                                 "full": 1e6},
+                            step_flops=1e15, peak_flops=2e14)
+    assert tight == "full"
+    loose, _ = remat_policy(cfg, None, hbm_bytes_per_device=1e12,
+                            act_bytes_per_layer={"none": 1e9, "dots": 1e8,
+                                                 "full": 1e6},
+                            step_flops=1e15, peak_flops=2e14)
+    assert loose == "none"

@@ -1,0 +1,75 @@
+"""Analytic-model validation: param_count vs real initialized sizes (exact),
+HLO collective parser on known text, roofline term sanity."""
+import numpy as np
+import jax
+import pytest
+
+from repro.analysis import flops as F
+from repro.analysis.hlo import collective_bytes, total_collective_bytes
+from repro.analysis.roofline import analyze
+from repro.configs import ARCH_IDS, SHAPES, get_arch
+from repro.models import lm
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "olmoe-1b-7b", "rwkv6-1.6b",
+                                  "zamba2-7b", "whisper-base"])
+def test_param_count_matches_init(arch):
+    cfg = get_arch(arch + "-smoke")
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    real = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    assert F.param_count(cfg) == real
+
+
+def test_param_count_flagship_sizes():
+    # sanity: the assigned archs land near their nameplate sizes
+    assert 95e9 < F.param_count(get_arch("command-r-plus-104b")) < 115e9
+    assert 30e9 < F.param_count(get_arch("yi-34b")) < 38e9
+    n_olmoe = F.param_count(get_arch("olmoe-1b-7b"))
+    a_olmoe = F.param_count(get_arch("olmoe-1b-7b"), active_only=True)
+    assert a_olmoe < n_olmoe / 3          # top-8 of 64 experts
+    assert 1.4e9 < F.param_count(get_arch("rwkv6-1.6b")) < 2.0e9
+
+
+HLO = """\
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %ar = f32[8,16]{1,0} all-reduce(%p0), to_apply=%add
+  %w = (s32[], f32[4,4]{1,0}) while(%t), condition=%cond, body=%region_1.2
+  ROOT %out = f32[8,16]{1,0} add(%ar, %ar)
+}
+
+%region_1.2 (arg: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %ag = f32[4,4]{1,0} all-gather(%x), dimensions={0}
+}
+"""
+
+
+def test_hlo_parser_counts_and_multiplies():
+    c = collective_bytes(HLO, while_multiplier=10.0)
+    assert c["all-reduce"] == 8 * 16 * 4              # top level, x1
+    assert c["all-gather"] == 4 * 4 * 4 * 10          # in while body, x10
+    assert total_collective_bytes(HLO, 10.0) == 512 + 640
+
+
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_roofline_terms_positive_all_cells(shape):
+    mesh = {"data": 16, "model": 16}
+    for arch in ARCH_IDS:
+        cfg = get_arch(arch)
+        if shape == "long_500k" and not cfg.subquadratic:
+            continue
+        rl = analyze(cfg, SHAPES[shape], mesh, remat="full")
+        assert rl.compute_s > 0 and rl.memory_s > 0
+        assert rl.collective_s >= 0
+        assert 0 < rl.usefulness <= 1.3, (arch, shape, rl.usefulness)
+        assert 0 < rl.roofline_fraction <= 1.0, (arch, shape)
+
+
+def test_decode_memory_levers():
+    """fp8 KV + weight-stationary decode must shrink the memory term."""
+    cfg = get_arch("yi-34b")
+    shape = SHAPES["decode_32k"]
+    mesh = {"data": 16, "model": 16}
+    base = analyze(cfg, shape, mesh)
+    opt = analyze(cfg, shape, mesh, kv_bytes=1, seq_shard_decode=True)
+    assert opt.memory_s < 0.5 * base.memory_s

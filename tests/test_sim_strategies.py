@@ -1,0 +1,103 @@
+"""Integration tests of the paper's strategies on the pipelined simulator —
+checks the qualitative claims of §3.7 hold on our implementation."""
+import numpy as np
+
+from repro.core.skew import SkewParams
+from repro.core.strategies import (FlowJoinStrategy, FluxStrategy,
+                                   NoMitigation, ReshapeStrategy)
+from repro.core.transfer import PartitionLogic
+from repro.core.worker import PipelinedSim
+from repro.core.adaptive import TauAdjuster
+
+KEYS = list(range(8))
+RATES = {k: 1.0 for k in KEYS}
+RATES[6] = 26.0
+RATES[4] = 3.8
+
+
+def run(strategy, ticks=300, **sim_kw):
+    sim = PipelinedSim(8, lambda t: RATES, proc_rate=5.0,
+                       logic=PartitionLogic.modulo(KEYS, 8), **sim_kw)
+    sim.run(ticks, strategy, metric_interval=5)
+    return sim
+
+
+def pair_lb(sim):
+    arr = sim.arrived
+    other = max(a for i, a in enumerate(arr) if i != 6)
+    return min(arr[6], other) / max(arr[6], other)
+
+
+def test_reshape_beats_baselines_on_lb():
+    lb_none = pair_lb(run(NoMitigation()))
+    lb_flux = pair_lb(run(FluxStrategy(SkewParams(eta=20, tau=20))))
+    lb_fj = pair_lb(run(FlowJoinStrategy()))
+    lb_rs = pair_lb(run(ReshapeStrategy(SkewParams(eta=20, tau=20))))
+    assert lb_rs > 0.85                         # paper: ~0.92
+    assert lb_rs > lb_fj > lb_flux              # paper Fig 3.20 ordering
+    assert lb_flux == lb_none                   # Flux can't split the hot key
+
+
+def test_first_phase_reaches_representative_ratio_earlier():
+    true_ratio = RATES[6] / RATES[4]
+
+    def time_to_ratio(first_phase):
+        hits = []
+
+        def obs(sim):
+            r = sim.processed_key[6] / max(sim.processed_key[4], 1.0)
+            if abs(r - true_ratio) / true_ratio < 0.30 and not hits:
+                hits.append(sim.tick_no)
+        sim = PipelinedSim(8, lambda t: RATES, proc_rate=5.0,
+                           logic=PartitionLogic.modulo(KEYS, 8))
+        sim.run(600, ReshapeStrategy(SkewParams(eta=20, tau=20),
+                                     first_phase=first_phase),
+                metric_interval=5, observer=obs)
+        return hits[0] if hits else 10_000
+    t_with = time_to_ratio(True)
+    t_without = time_to_ratio(False)
+    assert t_with <= t_without                  # Fig 3.18/3.19
+
+
+def test_control_delay_degrades_lb():
+    lb_fast = pair_lb(run(ReshapeStrategy(SkewParams(eta=20, tau=20))))
+    lb_slow = pair_lb(run(ReshapeStrategy(SkewParams(eta=20, tau=20)),
+                          control_delay=30))
+    assert lb_fast > lb_slow                    # Fig 3.21
+
+
+def test_distribution_shift_iterative_beats_oneshot():
+    # paper Fig 3.24: Flow-Join's one-shot split goes stale after the shift
+    rates_a = {k: 1.0 for k in KEYS}
+    rates_a[0] = 20.0
+    rates_b = {k: 1.0 for k in KEYS}
+    rates_b[0] = 8.0
+    rates_b[1] = 13.0
+
+    def mk():
+        return PipelinedSim(8, lambda t: rates_a if t < 150 else rates_b,
+                            proc_rate=4.0,
+                            logic=PartitionLogic.modulo(KEYS, 8))
+    rs = mk().run(400, ReshapeStrategy(SkewParams(eta=20, tau=20)),
+                  metric_interval=5)
+    fj = mk().run(400, FlowJoinStrategy(), metric_interval=5)
+
+    def spread(sim):
+        return np.std(sim.arrived)
+    assert spread(rs) < spread(fj)
+
+
+def test_adaptive_tau_reduces_iterations_for_tiny_tau():
+    fixed = ReshapeStrategy(SkewParams(eta=20, tau=2))
+    run(fixed)
+    dyn = ReshapeStrategy(SkewParams(eta=20, tau=2),
+                          adaptive_tau=TauAdjuster(eps_l=1.0, eps_u=5.0,
+                                                   tau=2, increase_by=20))
+    run(dyn)
+    assert dyn.iterations <= fixed.iterations   # Fig 3.22
+
+
+def test_migration_time_delays_mitigation_but_completes():
+    sim = run(ReshapeStrategy(SkewParams(eta=20, tau=20)),
+              migration_ticks=10)
+    assert pair_lb(sim) > 0.6

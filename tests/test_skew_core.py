@@ -1,0 +1,109 @@
+"""Reshape core: skew test, detection, transfer planning, adaptive tau,
+estimator, helpers — unit-level paper-faithfulness checks."""
+import math
+
+import pytest
+
+from repro.core.adaptive import TauAdjuster, tau_prime
+from repro.core.estimator import MeanModelEstimator
+from repro.core.helpers import choose_helpers, lr_max
+from repro.core.skew import SkewParams, detect, load_balancing_ratio, skew_test
+from repro.core.transfer import (PartitionLogic, phase1_apply, sbk_plan,
+                                 sbr_apply, sbr_fraction)
+
+
+def test_skew_test_eq_31_32():
+    p = SkewParams(eta=100, tau=50)
+    assert skew_test(200, 100, p)            # both inequalities hold
+    assert not skew_test(90, 10, p)          # eta violated
+    assert not skew_test(200, 180, p)        # tau violated
+
+
+def test_detect_pairs_lowest_helper_first():
+    p = SkewParams(eta=10, tau=10)
+    loads = {0: 100.0, 1: 5.0, 2: 50.0, 3: 1.0}
+    pairs = detect(loads, p)
+    # most loaded worker gets the least loaded helper
+    assert pairs[0] == (0, 3)
+    # helper/skewed not reused
+    flat = [w for pr in pairs for w in pr]
+    assert len(flat) == len(set(flat))
+
+
+def test_sbr_fraction_matches_paper_example():
+    # §3.3.2: loads 26 vs 7 -> redirect 9.5/26 to equalize (16.5 each)
+    f = sbr_fraction(26.0, 7.0)
+    assert abs(f - 9.5 / 26.0) < 1e-9
+
+
+def test_sbk_never_moves_hottest_key():
+    logic = PartitionLogic.modulo(list(range(4)), 2)   # worker0: {0,2}
+    loads = {0: 100.0, 2: 10.0}
+    moved = sbk_plan(loads, 0, 1, logic, target=50.0)
+    assert 0 not in moved                              # hottest key stays
+    assert logic.assignment[2] == [(1, 1.0)]
+
+
+def test_sbr_apply_routes_fraction():
+    logic = PartitionLogic.modulo([0, 1], 2)
+    sbr_apply(logic, 0, 1, 0.25)
+    w = [logic.route(0, u / 100.0) for u in range(100)]
+    assert abs(w.count(1) / 100.0 - 0.25) < 0.02
+
+
+def test_phase1_redirects_everything():
+    logic = PartitionLogic.modulo([0, 1], 2)
+    phase1_apply(logic, 0, 1)
+    assert all(logic.route(0, u / 10.0) == 1 for u in range(10))
+
+
+def test_estimator_standard_error_formula():
+    est = MeanModelEstimator()
+    xs = [10.0, 12.0, 11.0, 13.0]
+    for x in xs:
+        est.add({0: x})
+    mean, eps = est.predict(0)
+    n = len(xs)
+    mu = sum(xs) / n
+    var = sum((x - mu) ** 2 for x in xs) / (n - 1)
+    assert abs(mean - mu) < 1e-9
+    assert abs(eps - math.sqrt(var) * math.sqrt(1 + 1 / n)) < 1e-9
+
+
+def test_tau_adjuster_algorithm1():
+    # gap >= tau, eps high -> increase
+    adj = TauAdjuster(eps_l=98, eps_u=110, tau=100, increase_by=50)
+    assert adj.adjust(300, 100, eps=200) == 150
+    # gap < tau, eps low -> cut to current gap
+    adj = TauAdjuster(eps_l=98, eps_u=110, tau=1000)
+    assert adj.adjust(800, 100, eps=50) == 700
+    # in-band -> unchanged
+    adj = TauAdjuster(eps_l=98, eps_u=110, tau=500)
+    assert adj.adjust(800, 100, eps=100) == 500
+
+
+def test_tau_prime_earlier_start():
+    # significant migration time M lowers the detection threshold
+    assert tau_prime(100, 0.7, 0.3, tuples_per_sec=10, migration_secs=5) == \
+        100 - 0.4 * 10 * 5
+
+
+def test_choose_helpers_chi():
+    # candidates in increasing load; migration grows with helper count
+    cands = [(1, 0.05), (2, 0.10), (3, 0.15)]
+    chosen = choose_helpers(
+        f_s=0.5, candidates=cands, total_tuples=10000, tuples_left=3000,
+        tuples_per_sec=100,
+        migration_secs_for=lambda n: 4.0 * n)
+    assert chosen  # at least one helper chosen
+    # when LR_max is the binding term (plenty of future tuples), chi keeps
+    # increasing with helper count -> all three chosen (paper Fig 3.13)
+    all_chosen = choose_helpers(
+        f_s=0.5, candidates=cands, total_tuples=10000, tuples_left=100000,
+        tuples_per_sec=100, migration_secs_for=lambda n: 0.0)
+    assert len(all_chosen) == 3
+
+
+def test_lb_ratio():
+    assert load_balancing_ratio([50, 100]) == 0.5
+    assert load_balancing_ratio([0, 10]) == 0.0

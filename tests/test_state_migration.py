@@ -1,0 +1,67 @@
+"""State migration by mutability class (§3.5): replication for immutable
+state, synchronized SBK moves for group-by, scattered-state merge for
+range-sort under SBR."""
+import numpy as np
+
+from repro.core.state_migration import (GroupByAgg, HashJoinProbe,
+                                        RangeSortWorker, is_mutable,
+                                        merged_sorted_output, migration_time)
+
+
+def test_mutability_table():
+    assert not is_mutable("hashjoin", "probe")
+    assert is_mutable("hashjoin", "build")
+    assert is_mutable("groupby", "agg")
+    assert is_mutable("sort", "insert")
+
+
+def test_immutable_replication():
+    a = HashJoinProbe({"k1": [1, 2], "k2": [3]})
+    b = HashJoinProbe({})
+    cost = a.replicate_to(b, ["k1"])
+    assert b.build["k1"] == [1, 2]
+    assert cost.bytes_moved == 16
+    # probing at either worker gives identical results (immutable state)
+    assert a.process("k1", 9) == b.process("k1", 9)
+
+
+def test_groupby_sbk_migration_preserves_totals():
+    a, b = GroupByAgg(), GroupByAgg()
+    for v in range(10):
+        a.process("g1", 1.0)
+        a.process("g2", 2.0)
+    a.migrate_keys_to(b, ["g2"])
+    for v in range(5):
+        b.process("g2", 2.0)
+    assert a.agg.get("g2") is None
+    assert b.agg["g2"] == 30.0           # 10*2 migrated + 5*2 new
+
+
+def test_sort_scattered_state_merge():
+    """Paper Fig 3.11: range [0,10] split between S1 (owner) and S3 (helper);
+    on END markers the helper ships its scattered run back; global output
+    must be perfectly sorted and complete."""
+    rng = np.random.default_rng(0)
+    s1, s2, s3 = (RangeSortWorker(i) for i in range(3))
+    scopes = ["r0", "r1", "r2"]          # ranges [0,10], [11,20], [21,inf]
+    owner = {"r0": s1, "r1": s2, "r2": s3}
+    values = rng.integers(0, 30, 300)
+    for i, v in enumerate(values):
+        scope = "r0" if v <= 10 else "r1" if v <= 20 else "r2"
+        w = owner[scope]
+        if scope == "r0" and i % 2 == 0:
+            w = s3                        # SBR: half of r0's records -> helper
+        w.process(scope, int(v))
+    # upstream END markers (2 upstream workers)
+    for w in (s1, s2, s3):
+        w.on_end_marker(0, 2, owner)
+        w.on_end_marker(1, 2, owner)
+    out = merged_sorted_output([s1, s2, s3], scopes)
+    assert len(out) == len(values)
+    assert out == sorted(values.tolist())
+    # helper no longer holds scattered state
+    assert "r0" not in s3.runs or not s3.runs["r0"]
+
+
+def test_migration_time_model():
+    assert migration_time(1000, 1000.0) == 1.1

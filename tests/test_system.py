@@ -1,0 +1,77 @@
+"""End-to-end behaviour: the paper's full stack on the ML runtime —
+training with Reshape expert-skew mitigation, Amber interactivity, Maestro
+remat choice — loss goes down, skew goes down, nothing breaks."""
+import dataclasses
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.configs.base import reduced
+from repro.core.reshape_moe import MoEReshaper
+from repro.core.skew import SkewParams
+from repro.data.synthetic import TokenStream
+from repro.optim.adamw import AdamWCfg
+from repro.runtime.loop import LoopConfig, TrainLoop
+from repro.runtime.train import TrainHyper
+
+
+def test_train_loss_decreases():
+    cfg = reduced(get_arch("paper-moe-100m"), layers=2, d_model=64,
+                  vocab=256)
+    stream = TokenStream(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=0)
+    loop = TrainLoop(cfg, stream,
+                     TrainHyper(opt=AdamWCfg(lr=3e-3, warmup_steps=5,
+                                             total_steps=100)),
+                     LoopConfig(microbatches=2))
+    hist = loop.run(30)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first, (first, last)
+
+
+def test_reshape_mitigation_live_in_training():
+    """Skewed token classes -> routing hot spots; the reshaper must not
+    increase drops, and must actually fire + change the plan."""
+    cfg = get_arch("olmoe-1b-7b-smoke")     # 8 experts top-2, mesh-free
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+
+    def run(reshaper):
+        stream = TokenStream(vocab=cfg.vocab, seq_len=32, global_batch=8,
+                             seed=5, class_alpha=2.0)
+        loop = TrainLoop(cfg, stream, TrainHyper(),
+                         LoopConfig(microbatches=1), reshaper=reshaper)
+        hist = loop.run(12)
+        drops = [h["dropped"].sum() for h in hist if "dropped" in h]
+        return np.mean(drops[-4:]), loop
+
+    base_drops, _ = run(None)
+    rs = MoEReshaper(cfg, n_moe_layers=2, ep_ranks=2,
+                     params=SkewParams(eta=0.0, tau=0.15), phase1_steps=1)
+    mit_drops, loop = run(rs)
+    assert rs.iterations > 0                 # mitigation actually fired
+    assert mit_drops <= base_drops + 1       # result-awareness: fewer drops
+    identity_cum = np.ones_like(loop.plan_cum)
+    assert not np.array_equal(loop.plan_cum, identity_cum)  # plan changed
+
+
+def test_whisper_end_to_end_step():
+    cfg = get_arch("whisper-base-smoke")
+    stream = TokenStream(vocab=cfg.vocab, seq_len=16, global_batch=4)
+    loop = TrainLoop(cfg, stream, TrainHyper(), LoopConfig(microbatches=2))
+    hist = loop.run(2)
+    assert len(hist) == 2 and np.isfinite(hist[-1]["loss"])
+
+
+def test_batched_serving():
+    import jax
+    from repro.models import lm
+    from repro.runtime.serve import BatchedServer
+    cfg = get_arch("gemma3-1b-smoke")
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    srv = BatchedServer(cfg, params, max_len=32)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, cfg.vocab, (3, 5)).astype(np.int32)
+    out = srv.generate(prompts, max_new=4, temperature=0.0)
+    assert out.shape == (3, 4)
+    assert (out >= 0).all() and (out < cfg.vocab).all()
