@@ -1,8 +1,11 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV.  Sub-suites: paper_sim (Reshape Ch.3 figures on the Tier-A simulator),
+# CSV; ``--json PATH`` additionally writes the rows as a perf-trajectory
+# artifact (e.g. BENCH_runtime.json) for CI comparison across PRs.
+# Sub-suites: paper_sim (Reshape Ch.3 figures on the Tier-A simulator),
 # runtime_bench (Amber Ch.2 + live-MoE on the real JAX runtime),
 # maestro_bench (Ch.4 FRT/materialization).
 import argparse
+import json
 import sys
 
 
@@ -10,6 +13,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
                     choices=["all", "sim", "runtime", "maestro"])
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON perf artifact")
     args = ap.parse_args()
 
     sys.path.insert(0, "src")
@@ -26,13 +31,25 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    results = []
     for sname, fn in suites:
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.1f},{derived}", flush=True)
+                results.append({"suite": sname, "name": name,
+                                "us_per_call": round(us, 1),
+                                "derived": derived})
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"{sname}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            results.append({"suite": sname, "name": f"{sname}/ERROR",
+                            "us_per_call": 0.0,
+                            "derived": f"{type(e).__name__}:{e}"})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"suites": [s for s, _ in suites],
+                       "failures": failures, "rows": results}, f, indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -23,19 +23,23 @@ from repro.runtime.train import TrainHyper
 
 
 def _loop(arch="olmoe-1b-7b", mb=2, ckpt_every=0, tmp="/tmp/repro_bench_ckpt",
-          reshaper=None, class_alpha=0.0, seq=32, gb=8):
+          reshaper=None, class_alpha=0.0, seq=32, gb=8, step_path="auto"):
     cfg = get_arch(arch + "-smoke")
     stream = TokenStream(vocab=cfg.vocab, seq_len=seq, global_batch=gb,
                          seed=1, class_alpha=class_alpha)
     return TrainLoop(cfg, stream, TrainHyper(),
                      LoopConfig(microbatches=mb, ckpt_every=ckpt_every,
-                                ckpt_dir=tmp), reshaper=reshaper)
+                                ckpt_dir=tmp, step_path=step_path),
+                     reshaper=reshaper)
 
 
 def bench_pause_latency():
     """Fig 2.10/2.11: wall-time from Pause send to Paused state, while a
-    training job runs; median + p99 over repeated pauses."""
-    loop = _loop()
+    training job runs; median + p99 over repeated pauses.  Pinned to the
+    granulated path — this figure measures the per-microbatch control
+    point; under step_path=auto an async Pause lands at the next STEP
+    boundary instead."""
+    loop = _loop(step_path="granulated")
     loop.run(1)                                   # warm up jits
     lat = []
 
@@ -163,6 +167,101 @@ def bench_moe_reshape():
     return rows
 
 
+def bench_step_path():
+    """Ours: fused fast path vs granulated control path, steps/s on
+    olmoe-1b-7b-smoke.  The fused path scans all microbatches inside one jit
+    (one dispatch + one D2H metrics fetch per step); granulated pays the
+    Amber interactivity tax — dispatch, metric fetch, breakpoint check and
+    controller poll — on every microbatch.  The gap grows with microbatch
+    count (CPU numbers UNDERSTATE the accelerator win: XLA:CPU per-op
+    latency dominates each microbatch's compute, while on TPU the
+    per-microbatch host round-trips stall the device outright)."""
+    rows = []
+    for seq, gb, mb, steps in ((16, 16, 8, 6), (8, 32, 32, 4)):
+        cfg = get_arch("olmoe-1b-7b-smoke")
+        loops = {}
+        for path in ("granulated", "fused"):
+            stream = TokenStream(vocab=cfg.vocab, seq_len=seq,
+                                 global_batch=gb, seed=1)
+            loops[path] = TrainLoop(cfg, stream, TrainHyper(),
+                                    LoopConfig(microbatches=mb,
+                                               step_path=path))
+            loops[path].run(2)                        # warm up jits
+        # interleave paired trials so slow-machine phases hit both paths;
+        # report the median per-path time and median per-trial ratio
+        trials = {"granulated": [], "fused": []}
+        for _ in range(3):
+            for path in ("granulated", "fused"):
+                t0 = time.perf_counter()
+                loops[path].run(steps)
+                trials[path].append((time.perf_counter() - t0) / steps)
+        times = {}
+        for path in ("granulated", "fused"):
+            t = sorted(trials[path])[1]
+            times[path] = t
+            rows.append((f"step_path/mb{mb}/{path}", t * 1e6,
+                         f"steps_per_s={1.0 / t:.2f};seq={seq};gb={gb}"))
+        ratios = sorted(g / f for g, f in zip(trials["granulated"],
+                                              trials["fused"]))
+        rows.append((f"step_path/mb{mb}/speedup", 0.0,
+                     f"fused_over_granulated={ratios[1]:.2f}x"))
+    return rows
+
+
+def bench_reshaper_latency():
+    """Ours: controller decision latency — vectorized MoEReshaper.step() vs
+    the pre-vectorization loop implementation (LoopReshaper), across plan
+    sizes and skew regimes at the paper-scale (L=16, E=64, R=4) point."""
+    from repro.configs.base import ArchConfig, MoECfg
+    from repro.core.reshape_moe import LoopReshaper
+
+    def mk(cls, L, E, R, ranks):
+        cfg = ArchConfig(name="bench", family="moe", num_layers=L,
+                         d_model=64, n_heads=2, n_kv_heads=2, d_ff=256,
+                         vocab=256, moe=MoECfg(num_experts=E, top_k=2,
+                                               expert_d_ff=256,
+                                               max_replicas=R))
+        return cls(cfg, L, ep_ranks=ranks,
+                   params=SkewParams(eta=0.0, tau=0.25), phase1_steps=1)
+
+    def timed(rs, o, d, reps):
+        for _ in range(5):
+            rs.observe(o, d)
+            rs.step()
+        deltas = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                rs.observe(o, d)
+            t_obs = (time.perf_counter() - t0) / reps
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                rs.observe(o, d)
+                rs.step()
+            t_both = (time.perf_counter() - t0) / reps
+            # paired within-trial delta; clamp so timing noise can never
+            # emit a negative/zero latency into the perf artifact
+            deltas.append(max(t_both - t_obs, 1e-9))
+        return min(deltas)
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for (L, E, R, ranks) in [(16, 64, 4, 8), (32, 128, 4, 8)]:
+        base = rng.uniform(80, 120, (L, E))
+        skewed = base.copy()
+        for l in range(max(1, L // 4)):
+            skewed[l, l % E] += 3000
+        d = rng.integers(0, 50, L)
+        for scen, o in (("balanced", base), ("skewed", skewed)):
+            t_vec = timed(mk(MoEReshaper, L, E, R, ranks), o, d, 100)
+            t_loop = timed(mk(LoopReshaper, L, E, R, ranks), o, d, 20)
+            rows.append((f"reshaper_latency/L{L}E{E}R{R}/{scen}",
+                         t_vec * 1e6,
+                         f"loop_us={t_loop * 1e6:.1f};"
+                         f"speedup={t_loop / t_vec:.1f}x"))
+    return rows
+
+
 def bench_kernels():
     """Kernel microbenchmarks (jnp chunked path timings on CPU + numerics
     vs oracle; the Pallas kernels are TPU-target, validated in tests)."""
@@ -226,9 +325,16 @@ def bench_kernels():
 
 
 def run():
+    import gc
     rows = []
-    for fn in (bench_pause_latency, bench_breakpoint_tau,
+    # timing-sensitive comparisons (step_path, reshaper) run FIRST: the
+    # long-running Amber benches leave the allocator/caches warm in ways
+    # that skew both sides of a later A/B comparison; gc between benches
+    # frees each bench's loops/params before the next one times anything.
+    for fn in (bench_step_path, bench_reshaper_latency,
+               bench_pause_latency, bench_breakpoint_tau,
                bench_fault_tolerance, bench_metric_overhead,
                bench_moe_reshape, bench_kernels):
         rows.extend(fn())
+        gc.collect()
     return rows

@@ -31,6 +31,9 @@ class MoECfg:
     spare_slots: int = 2
     # max replicas a single (hot) logical expert may be split across (SBR).
     max_replicas: int = 4
+    # route via the fused Pallas gating kernel (softmax + top-k + load
+    # histogram in one pass); interpret-mode fallback off-TPU.
+    fused_gating: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

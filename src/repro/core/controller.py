@@ -116,6 +116,13 @@ class Controller:
         return {"updates": updates, "plan": plan, "stopped": self.stopped}
 
     # --------------------------------------------------------------- replay
+    def is_replaying(self) -> bool:
+        """True while logged control messages are still pending re-application
+        (recovery); the loop must stay on the granulated path so they land at
+        their recorded (step, microbatch) points.  Covers both
+        ReplayingController and replay_into-style injection."""
+        return bool(getattr(self, "_replay", None))
+
     def replay_records(self, after_step: int) -> List[LogRecord]:
         """Records to re-apply when recovering from a checkpoint taken at the
         end of ``after_step`` (§2.6.2 recovery)."""

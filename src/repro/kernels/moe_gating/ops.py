@@ -7,9 +7,9 @@ from repro.kernels.moe_gating.moe_gating import gating_pallas
 from repro.kernels.moe_gating.ref import gating_ref
 
 
-def gating(logits, k: int, impl: str = "auto"):
+def gating(logits, k: int, impl: str = "auto", bt: int = 256):
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if impl == "jnp":
         return gating_ref(logits, k)
-    return gating_pallas(logits, k, interpret=(impl == "interpret"))
+    return gating_pallas(logits, k, bt=bt, interpret=(impl == "interpret"))

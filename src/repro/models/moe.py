@@ -54,6 +54,16 @@ def capacity(cfg: ArchConfig, tokens: int) -> int:
     return max(4, int(tokens * m.top_k * m.capacity_factor / m.num_experts))
 
 
+def _gating_block(t: int, cap: int = 256) -> int:
+    """Largest divisor of ``t`` that is <= cap (gating_pallas needs
+    t % bt == 0; gcd(t, 256) only yields powers of two and collapses to a
+    1-row block for odd t)."""
+    for d in range(min(cap, t), 0, -1):
+        if t % d == 0:
+            return d
+    return 1
+
+
 def _hash_unit(idx):
     """Deterministic token -> [0,1) bucket (Knuth multiplicative hash)."""
     h = (idx.astype(jnp.uint32) * jnp.uint32(2654435761))
@@ -61,12 +71,27 @@ def _hash_unit(idx):
 
 
 def route(router_w, x, plan_slots, plan_cum, cfg: ArchConfig, token_offset=0):
-    """x [T,D] -> (slot [T,k], weight [T,k], probs [T,E], expert [T,k])."""
+    """x [T,D] -> (slot [T,k], weight [T,k], probs [T,E], expert [T,k],
+    counts [E] i32 from the fused gating kernel, or None)."""
     m = cfg.moe
     logits = jnp.einsum("td,de->te", x, router_w.astype(x.dtype))
     logits = logits.astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
-    top_p, top_e = jax.lax.top_k(probs, m.top_k)          # [T,k]
+    counts = None
+    if m.fused_gating:
+        # Fused Pallas router: softmax + top-k + the Reshape load histogram
+        # in one kernel, so metric collection costs zero extra passes.  The
+        # kernel's outputs used here are integer (expert ids, counts); the
+        # differentiable weights are re-gathered from `probs` below, so the
+        # kernel itself needs no VJP rule.
+        from repro.kernels.moe_gating.ops import gating
+        impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+        bt = _gating_block(x.shape[0])
+        _, top_e, counts = gating(jax.lax.stop_gradient(logits), m.top_k,
+                                  impl=impl, bt=bt)
+        top_p = jnp.take_along_axis(probs, top_e, axis=-1)  # [T,k]
+    else:
+        top_p, top_e = jax.lax.top_k(probs, m.top_k)        # [T,k]
     weight = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
 
     # Reshape SBR replica choice: hash token index into [0,1), pick replica by
@@ -76,7 +101,7 @@ def route(router_w, x, plan_slots, plan_cum, cfg: ArchConfig, token_offset=0):
     cum_g = plan_cum[top_e]                                # [T,k,R]
     r = (cum_g[..., :-1] <= u[:, None, None]).sum(-1)      # [T,k]
     slot = jnp.take_along_axis(plan_slots[top_e], r[..., None], -1)[..., 0]
-    return slot.astype(jnp.int32), weight, probs, top_e
+    return slot.astype(jnp.int32), weight, probs, top_e, counts
 
 
 def dispatch_combine(x, slot, weight, expert_fn, n_slots: int, cap: int,
@@ -162,7 +187,8 @@ def moe_ffn_sharded(p, x, plan_slots, plan_cum, cfg: ArchConfig, mesh,
             base = token_offset + row * t_loc
         else:
             base = token_offset
-        slot, weight, probs, top_e = route(router_w, xl, ps, pc, cfg, base)
+        slot, weight, probs, top_e, r_counts = route(router_w, xl, ps, pc,
+                                                     cfg, base)
         col = jax.lax.axis_index("model")
         lo = col * spr
         mine = (slot >= lo) & (slot < lo + spr)
@@ -184,8 +210,8 @@ def moe_ffn_sharded(p, x, plan_slots, plan_cum, cfg: ArchConfig, mesh,
         dropped = (routed - slot_counts).sum()
         if da:
             dropped = jax.lax.psum(dropped, da)
-        e_counts = jnp.zeros((m.num_experts,), jnp.int32).at[
-            top_e.reshape(-1)].add(1)
+        e_counts = r_counts if r_counts is not None else jnp.zeros(
+            (m.num_experts,), jnp.int32).at[top_e.reshape(-1)].add(1)
         if da:
             e_counts = jax.lax.psum(e_counts, da)
             slot_counts = jax.lax.psum(slot_counts, da)
@@ -250,7 +276,8 @@ def moe_ffn_a2a(p, x, plan_slots, plan_cum, cfg: ArchConfig, mesh,
             for a in all_axes[1:]:
                 idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
             base = token_offset + idx * t_loc
-        slot, weight, probs, top_e = route(router_w, xl, ps, pc, cfg, base)
+        slot, weight, probs, top_e, r_counts = route(router_w, xl, ps, pc,
+                                                     cfg, base)
         col_of = (slot // spr).astype(jnp.int32)          # dest EP rank
         tk = t_loc * m_cfg.top_k
         flat_col = col_of.reshape(tk)
@@ -307,8 +334,8 @@ def moe_ffn_a2a(p, x, plan_slots, plan_cum, cfg: ArchConfig, mesh,
         slot_counts = met["kept_counts"]
         if da:
             slot_counts = jax.lax.psum(slot_counts, da)
-        e_counts = jnp.zeros((m_cfg.num_experts,), jnp.int32).at[
-            top_e.reshape(-1)].add(1)
+        e_counts = r_counts if r_counts is not None else jnp.zeros(
+            (m_cfg.num_experts,), jnp.int32).at[top_e.reshape(-1)].add(1)
         e_counts = jax.lax.psum(e_counts, all_axes if sharded else da) \
             if (da or sharded) else e_counts
         dropped = (tk - keep.sum()) + met["dropped"]
@@ -354,8 +381,8 @@ def moe_ffn(p, x, plan_slots, plan_cum, cfg: ArchConfig, token_offset=0,
                                token_offset, tokens_sharded)
     m = cfg.moe
     t = x.shape[0]
-    slot, weight, probs, top_e = route(p["router"], x, plan_slots, plan_cum,
-                                       cfg, token_offset)
+    slot, weight, probs, top_e, r_counts = route(
+        p["router"], x, plan_slots, plan_cum, cfg, token_offset)
     cap = capacity(cfg, t)
     s = num_slots(cfg)
 
@@ -367,9 +394,11 @@ def moe_ffn(p, x, plan_slots, plan_cum, cfg: ArchConfig, token_offset=0,
 
     y, metrics = dispatch_combine(x, slot, weight, expert_fn, s, cap)
 
-    # Switch-style load-balance aux loss over *logical* experts.
-    e_counts = jnp.zeros((m.num_experts,), jnp.float32).at[
-        top_e.reshape(-1)].add(1.0)
+    # Switch-style load-balance aux loss over *logical* experts.  With fused
+    # gating the histogram comes straight from the kernel.
+    e_counts = r_counts.astype(jnp.float32) if r_counts is not None else \
+        jnp.zeros((m.num_experts,), jnp.float32).at[
+            top_e.reshape(-1)].add(1.0)
     f = e_counts / (t * m.top_k)
     pbar = probs.mean(0)
     metrics["aux_loss"] = m.num_experts * jnp.sum(f * pbar)

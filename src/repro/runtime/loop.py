@@ -29,7 +29,8 @@ from repro.core.reshape_moe import MoEReshaper
 from repro.data.synthetic import TokenStream
 from repro.models import lm
 from repro.models import moe as moe_lib
-from repro.runtime.train import TrainHyper, build_grad_step, make_state
+from repro.runtime.train import (TrainHyper, build_fused_step,
+                                 build_grad_step, make_state)
 
 
 @dataclasses.dataclass
@@ -38,6 +39,10 @@ class LoopConfig:
     ckpt_every: int = 0                  # 0 = off
     ckpt_dir: str = "/tmp/repro_ckpt"
     lr_scale: float = 1.0
+    # step-path selection: "auto" pays the granulated interactivity tax only
+    # when interactivity is in use (pending message / breakpoint / pause /
+    # replay); "granulated" and "fused" force one path (benchmarks).
+    step_path: str = "auto"
 
 
 class TrainLoop:
@@ -51,18 +56,21 @@ class TrainLoop:
         self.stream = stream
         self.hyper = hyper
         self.lc = loop_cfg
+        assert loop_cfg.step_path in ("auto", "fused", "granulated"), \
+            loop_cfg.step_path
         self.controller = controller or Controller()
         self.reshaper = reshaper
         self.state = make_state(cfg, jax.random.PRNGKey(seed))
         self.grad_mb, self.apply, self.migrate = build_grad_step(cfg, hyper)
+        self.fused_step = build_fused_step(cfg, hyper)
+        self._plan_dev = None            # cached device-resident plan arrays
         nl = lm.n_moe_layers(cfg)
         if nl:
             plan = moe_lib.identity_plan(cfg, nl)
-            self.plan_slots = np.asarray(plan.slots)
-            self.plan_cum = np.asarray(plan.cum)
+            self._set_plan(np.asarray(plan.slots), np.asarray(plan.cum))
             if reshaper is not None:
-                self.plan_slots = reshaper.plan_slots.copy()
-                self.plan_cum = reshaper.plan_cum.copy()
+                self._set_plan(reshaper.plan_slots.copy(),
+                               reshaper.plan_cum.copy())
         else:
             self.plan_slots = self.plan_cum = None
         self.local_bps: List[LocalBreakpoint] = []
@@ -96,8 +104,8 @@ class TrainLoop:
         r = self.controller.poll(step, mb, self._inspect)
         self._apply_updates(r["updates"])
         if r["plan"] is not None:
-            self.plan_slots = np.asarray(r["plan"]["slots"])
-            self.plan_cum = np.asarray(r["plan"]["cum"])
+            self._set_plan(np.asarray(r["plan"]["slots"]),
+                           np.asarray(r["plan"]["cum"]))
             if r["plan"]["migrations"]:
                 self._migrate(r["plan"]["migrations"])
         for bp in self.controller.breakpoints:
@@ -115,13 +123,124 @@ class TrainLoop:
                            for m in migrations], jnp.int32)
         self.state = self.migrate(self.state, arr)
 
+    def _set_plan(self, slots, cum) -> None:
+        """Single mutation point for the routing plan.  The cached device
+        arrays are invalidated only when the plan VALUES change — the reshaper
+        returns fresh copies every step, which must not force an H2D
+        re-upload per step (let alone the old one per microbatch)."""
+        if (self._plan_dev is not None and self.plan_slots is not None
+                and np.array_equal(slots, self.plan_slots)
+                and np.array_equal(cum, self.plan_cum)):
+            self.plan_slots, self.plan_cum = slots, cum
+            return
+        self.plan_slots, self.plan_cum = slots, cum
+        self._plan_dev = None
+
     def _plan_args(self):
-        if self.plan_slots is None:
-            e = jnp.zeros((1, 1, 1), jnp.int32)
-            return e, jnp.ones((1, 1, 1), jnp.float32)
-        return jnp.asarray(self.plan_slots), jnp.asarray(self.plan_cum)
+        if self._plan_dev is None:
+            if self.plan_slots is None:
+                self._plan_dev = (jnp.zeros((1, 1, 1), jnp.int32),
+                                  jnp.ones((1, 1, 1), jnp.float32))
+            else:
+                self._plan_dev = (jnp.asarray(self.plan_slots),
+                                  jnp.asarray(self.plan_cum))
+        return self._plan_dev
 
     # ----------------------------------------------------------------- run
+    def _fused_eligible(self) -> bool:
+        """Adaptive control granularity: take the fused fast path only when
+        nothing can demand a mid-step control point — no pending or replaying
+        message, no registered breakpoint, not paused/stopped.  Whenever
+        interactivity is actually in use, fall back to the granulated path so
+        Amber's per-microbatch semantics are preserved exactly."""
+        if self.lc.step_path == "granulated":
+            return False
+        if self.lc.step_path == "fused":
+            return True
+        c = self.controller
+        return (not c.paused and not c.stopped and c.mailbox.empty()
+                and not self.local_bps and not self.global_bps
+                and not c.is_replaying())
+
+    def _check_breakpoints(self, m_host: Dict[str, Any],
+                           tokens_count: float) -> None:
+        for bp in self.local_bps:
+            if bp.check({k: v for k, v in m_host.items()
+                         if np.ndim(v) == 0}):
+                self.hit_breakpoints.append(bp.name)
+                self.controller.paused = True
+        for bp in list(self.global_bps):
+            if bp.update([tokens_count]):
+                self.hit_breakpoints.append(bp.name)
+                self.controller.paused = True
+                # COUNT targets fire once (unlike local condition
+                # breakpoints, which re-check every iteration)
+                self.global_bps.remove(bp)
+
+    def _step_granulated(self, step: int, batch, n_mb: int):
+        """One training step at microbatch control granularity (§2.4.3).
+        Returns (step_metrics, stopped); metrics is None when stopped."""
+        gb = batch["tokens"].shape[0]
+        mb_sz = gb // n_mb
+        grads = None
+        sums: Dict[str, Any] = {}
+        mb_done = 0
+        for i in range(n_mb):
+            mbd = {"tokens": jnp.asarray(
+                batch["tokens"][i * mb_sz:(i + 1) * mb_sz])}
+            if self.cfg.enc_layers:
+                mbd["frames"] = jnp.zeros(
+                    (mb_sz, self.cfg.enc_seq, self.cfg.d_model),
+                    jnp.float32)
+            ps, pc = self._plan_args()
+            offset = (step * n_mb + i) * mb_sz * self.stream.seq_len
+            g, metrics = self.grad_mb(self.state["params"], mbd, ps, pc,
+                                      jnp.asarray(offset))
+            grads = g if grads is None else jax.tree.map(
+                lambda a, b: a + b, grads, g)
+            m_host = {k: np.asarray(v) for k, v in metrics.items()}
+            sums = _merge_metrics(sums, m_host)
+            mb_done += 1
+            # --- Amber granulated control point (one per microbatch) ---
+            self._check_breakpoints(m_host, float(mbd["tokens"].size))
+            if self._poll(step, i + 1):
+                return None, True
+        step_metrics = _finalize_metrics(sums, mb_done)
+        self.state, opt_m = self.apply(self.state, grads, n_mb,
+                                       jnp.asarray(self.lc.lr_scale))
+        step_metrics.update({k: np.asarray(v) for k, v in opt_m.items()})
+        return step_metrics, False
+
+    def _step_fused(self, batch, n_mb: int) -> Dict[str, Any]:
+        """One training step through the fused jit: all microbatches scanned
+        in-device, one dispatch, one device->host metrics fetch."""
+        gb = batch["tokens"].shape[0]
+        used = (gb // n_mb) * n_mb      # granulated path drops the remainder
+        bd = {"tokens": jnp.asarray(batch["tokens"][:used])}
+        if self.cfg.enc_layers:
+            bd["frames"] = jnp.zeros(
+                (used, self.cfg.enc_seq, self.cfg.d_model), jnp.float32)
+        ps, pc = self._plan_args()
+        self.state, mb_metrics, opt_m = self.fused_step(
+            self.state, bd, ps, pc, jnp.asarray(self.lc.lr_scale),
+            n_mb=n_mb)
+        mb_host, opt_host = jax.device_get((mb_metrics, opt_m))
+        if self.local_bps or self.global_bps:
+            # forced step_path="fused" with registered breakpoints (auto
+            # mode never gets here): evaluate the predicates post hoc on
+            # the stacked per-microbatch metrics
+            tokens_mb = float(used * batch["tokens"].shape[1]) / n_mb
+            for i in range(n_mb):
+                self._check_breakpoints(
+                    {k: np.asarray(v)[i] for k, v in mb_host.items()},
+                    tokens_mb)
+        step_metrics = {
+            k: (np.asarray(v).mean(0) if k in _MEAN_KEYS
+                else np.asarray(v).sum(0))
+            for k, v in mb_host.items()}
+        step_metrics.update({k: np.asarray(v) for k, v in opt_host.items()})
+        return step_metrics
+
     def run(self, steps: int) -> List[Dict[str, Any]]:
         n_mb = self.lc.microbatches
         for _ in range(steps):
@@ -129,47 +248,13 @@ class TrainLoop:
             if self._poll(step, 0):
                 break
             batch = self.stream.next()
-            gb = batch["tokens"].shape[0]
-            mb_sz = gb // n_mb
-            grads = None
-            step_metrics: Dict[str, Any] = {}
-            paused_mid = False
-            for i in range(n_mb):
-                mbd = {"tokens": jnp.asarray(
-                    batch["tokens"][i * mb_sz:(i + 1) * mb_sz])}
-                if self.cfg.enc_layers:
-                    mbd["frames"] = jnp.zeros(
-                        (mb_sz, self.cfg.enc_seq, self.cfg.d_model),
-                        jnp.float32)
-                ps, pc = self._plan_args()
-                offset = (step * n_mb + i) * mb_sz * self.stream.seq_len
-                g, metrics = self.grad_mb(self.state["params"], mbd, ps, pc,
-                                          jnp.asarray(offset))
-                grads = g if grads is None else jax.tree.map(
-                    lambda a, b: a + b, grads, g)
-                m_host = {k: np.asarray(v) for k, v in metrics.items()}
-                step_metrics = _merge_metrics(step_metrics, m_host)
-                # --- Amber granulated control point (one per microbatch) ---
-                for bp in self.local_bps:
-                    if bp.check({k: v for k, v in m_host.items()
-                                 if np.ndim(v) == 0}):
-                        self.hit_breakpoints.append(bp.name)
-                        self.controller.paused = True
-                for bp in list(self.global_bps):
-                    if bp.update([float(mbd["tokens"].size)]):
-                        self.hit_breakpoints.append(bp.name)
-                        self.controller.paused = True
-                        # COUNT targets fire once (unlike local condition
-                        # breakpoints, which re-check every iteration)
-                        self.global_bps.remove(bp)
-                if self._poll(step, i + 1):
-                    paused_mid = True
+            if self._fused_eligible():
+                step_metrics = self._step_fused(batch, n_mb)
+            else:
+                step_metrics, stopped = self._step_granulated(step, batch,
+                                                              n_mb)
+                if stopped:
                     break
-            if paused_mid and self.controller.stopped:
-                break
-            self.state, opt_m = self.apply(self.state, grads, n_mb,
-                                           jnp.asarray(self.lc.lr_scale))
-            step_metrics.update({k: np.asarray(v) for k, v in opt_m.items()})
             self.history.append({"step": step, **{
                 k: (float(v) if np.ndim(v) == 0 else v)
                 for k, v in step_metrics.items()}})
@@ -180,7 +265,7 @@ class TrainLoop:
                 ps, pc, migs = self.reshaper.step()
                 if migs:
                     self._migrate(migs)
-                self.plan_slots, self.plan_cum = ps, pc
+                self._set_plan(ps, pc)
             if self.ckpt and (step + 1) % self.lc.ckpt_every == 0:
                 self.save(step + 1)
         return self.history
@@ -217,21 +302,30 @@ class TrainLoop:
         loop.stream.restore(payload["extra"]["stream"])
         loop.lc.lr_scale = payload["extra"]["lr_scale"]
         if payload["extra"]["plan_slots"] is not None:
-            loop.plan_slots = payload["extra"]["plan_slots"]
-            loop.plan_cum = payload["extra"]["plan_cum"]
+            loop._set_plan(payload["extra"]["plan_slots"],
+                           payload["extra"]["plan_cum"])
         # replayed messages were already logged pre-crash; keep the old log
         loop.controller.log = list(records)
         return loop
 
 
+# metric keys averaged over microbatches; everything else is summed
+_MEAN_KEYS = ("ce", "loss", "aux_loss")
+
+
 def _merge_metrics(acc: Dict[str, Any], new: Dict[str, Any]) -> Dict[str, Any]:
+    """Accumulate per-microbatch metric SUMS (mean keys are divided once by
+    the microbatch count in ``_finalize_metrics`` — a running (a+b)/2 average
+    would exponentially down-weight early microbatches when n_mb > 2)."""
     out = dict(acc)
     for k, v in new.items():
-        if k not in out:
-            out[k] = v
-        elif np.ndim(v) == 0:
-            out[k] = (out[k] + v) / 2 if k in ("ce", "loss", "aux_loss") \
-                else out[k] + v
-        else:
-            out[k] = out[k] + v
+        out[k] = v if k not in out else out[k] + v
+    return out
+
+
+def _finalize_metrics(sums: Dict[str, Any], n_mb: int) -> Dict[str, Any]:
+    out = dict(sums)
+    for k in _MEAN_KEYS:
+        if k in out:
+            out[k] = out[k] / max(n_mb, 1)
     return out

@@ -117,6 +117,69 @@ def build_train_step(cfg: ArchConfig, shape: ShapeCfg, hyper: TrainHyper,
     return step
 
 
+def build_fused_step(cfg: ArchConfig, hyper: TrainHyper):
+    """Fused fast path for the interactive loop: ALL microbatches run inside
+    one jit via ``lax.scan`` with in-jit gradient accumulation, followed by
+    the optimizer apply — one dispatch and one device->host metrics fetch per
+    step instead of ``2 * n_mb`` dispatches plus per-microbatch syncs.
+
+    Numerics mirror the granulated path exactly: per-microbatch grads are
+    summed in fp32 in microbatch order, divided once by ``n_mb``, and fed to
+    the same ``adamw.apply``.  Metrics come back STACKED per microbatch
+    ``[n_mb, ...]`` so the host can still evaluate breakpoint predicates at
+    microbatch granularity post hoc.
+
+    The old state is donated (buffer reuse for params/opt moments) on
+    accelerator backends; CPU ignores donation, so skip it there to avoid
+    per-step warnings.
+    """
+    nl_moe = lm.n_moe_layers(cfg)
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+
+    @partial(jax.jit, static_argnames=("n_mb",), donate_argnums=donate)
+    def fused(state, batch, plan_slots, plan_cum, lr_scale, n_mb: int):
+        plan = moe_lib.RoutingPlan(plan_slots, plan_cum) if nl_moe else None
+        tokens = batch["tokens"]
+        gb, s = tokens.shape
+        mb = gb // n_mb
+
+        mb_batch = {k: v.reshape((n_mb, mb) + v.shape[1:])
+                    for k, v in batch.items()
+                    if k in ("tokens", "frames", "positions3")}
+        # hoist the fp32->bf16 params cast out of the scan: XLA does not
+        # move it through value_and_grad, so the per-microbatch path would
+        # re-cast every iteration.  Differentiating w.r.t. the bf16 tree
+        # yields exactly the cotangents the fp32 cast's VJP would upcast,
+        # so accumulating their fp32 upcast is bit-identical to the
+        # granulated path (loss_fn's internal cast is a no-op on bf16).
+        params_bf = jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16)
+            if x.dtype == jnp.float32 else x, state["params"])
+        grad_zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+
+        def mb_body(carry, mbd):
+            gacc, i = carry
+            offset = (state["step"].astype(jnp.int32) * n_mb + i) * (mb * s)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params_bf, mbd, cfg, hyper,
+                                       plan, offset)
+            gacc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+            return (gacc, i + 1), metrics
+
+        (grads, _), mb_metrics = jax.lax.scan(
+            mb_body, (grad_zero, jnp.zeros((), jnp.int32)), mb_batch)
+        grads = jax.tree.map(lambda g: g / n_mb, grads)
+        params, opt, opt_m = adamw.apply(state["params"], grads,
+                                         state["opt"], hyper.opt, lr_scale)
+        new_state = {"params": params, "opt": opt,
+                     "step": state["step"] + 1}
+        return new_state, mb_metrics, opt_m
+
+    return fused
+
+
 def build_grad_step(cfg: ArchConfig, hyper: TrainHyper):
     """Interactive-mode pieces: one-microbatch grad + separate apply (the
     Amber granulated iteration: the loop polls control between microbatches)."""

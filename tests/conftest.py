@@ -6,3 +6,10 @@ import sys
 os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: slow end-to-end test; deselect with -m 'not slow' "
+        "(fast suite targets < 60 s)")

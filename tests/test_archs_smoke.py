@@ -24,6 +24,7 @@ def _batch(cfg, b, s):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_forward_and_decode(arch):
     cfg = get_arch(arch + "-smoke")
@@ -40,6 +41,7 @@ def test_forward_and_decode(arch):
     assert int(state["pos"]) == 1
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_one_train_step(arch):
     cfg = get_arch(arch + "-smoke")

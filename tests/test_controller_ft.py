@@ -6,6 +6,7 @@ import threading
 import time
 
 import numpy as np
+import pytest
 import jax
 
 from repro.configs import get_arch
@@ -118,6 +119,7 @@ def test_sum_predicate_single_worker_endgame_reduces_overshoot():
     assert with_endgame.overshoot <= without.overshoot + 1e-9
 
 
+@pytest.mark.slow
 def test_fault_tolerance_bit_exact_recovery(tmp_path):
     """Run A: 8 steps with an lr update at step 4 (logged), checkpoint@4.
     Run B: same but 'crash' after step 6, recover from ckpt, replay, finish.

@@ -1,0 +1,241 @@
+"""Fused-step fast path + vectorized Reshape controller.
+
+Covers: fused-vs-granulated step equivalence (same seed -> same steps, loss
+trajectories within fp tolerance, identical Reshape plans/migrations),
+adaptive control-granularity selection, device-plan caching, the unbiased
+microbatch metric merge, the vectorized-vs-loop reshaper regression, the
+fresh-SkewParams default, and the fused Pallas gating opt-in.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import ArchConfig, MoECfg
+from repro.core import messages as M
+from repro.core import reshape_moe as rm
+from repro.core.breakpoints import LocalBreakpoint
+from repro.core.skew import SkewParams
+from repro.data.synthetic import TokenStream
+from repro.runtime.loop import (LoopConfig, TrainLoop, _finalize_metrics,
+                                _merge_metrics)
+from repro.runtime.train import TrainHyper
+
+
+def _loop(cfg, step_path, reshaper=None, mb=2, seed=5, alpha=2.0):
+    stream = TokenStream(vocab=cfg.vocab, seq_len=32, global_batch=8,
+                         seed=seed, class_alpha=alpha)
+    return TrainLoop(cfg, stream, TrainHyper(),
+                     LoopConfig(microbatches=mb, step_path=step_path),
+                     reshaper=reshaper)
+
+
+def _reshaper(cfg):
+    return rm.MoEReshaper(cfg, 2, ep_ranks=2,
+                          params=SkewParams(eta=0.0, tau=0.15),
+                          phase1_steps=1)
+
+
+@pytest.mark.slow
+def test_fused_matches_granulated_with_reshape():
+    cfg = get_arch("olmoe-1b-7b-smoke")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+    rs_f, rs_g = _reshaper(cfg), _reshaper(cfg)
+    lf = _loop(cfg, "fused", rs_f)
+    lg = _loop(cfg, "granulated", rs_g)
+    hf, hg = lf.run(8), lg.run(8)
+    assert int(lf.state["step"]) == int(lg.state["step"]) == 8
+    for a, b in zip(hf, hg):
+        assert abs(a["loss"] - b["loss"]) < 1e-4
+        np.testing.assert_array_equal(a["expert_counts"], b["expert_counts"])
+    # Reshape made identical decisions on both paths
+    assert rs_f.iterations == rs_g.iterations > 0
+    np.testing.assert_array_equal(lf.plan_slots, lg.plan_slots)
+    np.testing.assert_array_equal(lf.plan_cum, lg.plan_cum)
+    assert [(e.layer, e.hot_expert) for e in rs_f.events] == \
+           [(e.layer, e.hot_expert) for e in rs_g.events]
+
+
+def test_adaptive_granularity_selection():
+    cfg = get_arch("gemma3-1b-smoke")
+    stream = TokenStream(vocab=cfg.vocab, seq_len=8, global_batch=2)
+    loop = TrainLoop(cfg, stream, TrainHyper(), LoopConfig(microbatches=1))
+    assert loop._fused_eligible()                 # idle controller -> fused
+    loop.local_bps.append(LocalBreakpoint("bp", lambda m: False))
+    assert not loop._fused_eligible()             # breakpoint -> granulated
+    loop.local_bps.clear()
+    loop.controller.mailbox.put(M.inspect())
+    assert not loop._fused_eligible()             # pending message
+    loop.controller.mailbox.get_nowait()
+    loop.controller.paused = True
+    assert not loop._fused_eligible()             # paused
+    loop.controller.paused = False
+    loop.lc.step_path = "granulated"
+    assert not loop._fused_eligible()             # forced off
+
+
+def test_plan_cache_reuploads_only_on_change():
+    cfg = get_arch("olmoe-1b-7b-smoke")
+    loop = _loop(cfg, "auto")
+    dev0 = loop._plan_args()
+    # same values (fresh copies, as the reshaper returns) -> cache kept
+    loop._set_plan(loop.plan_slots.copy(), loop.plan_cum.copy())
+    assert loop._plan_args() is dev0
+    # changed plan -> cache invalidated
+    new_cum = loop.plan_cum.copy()
+    new_cum[0, 0, 0] = 0.5
+    loop._set_plan(loop.plan_slots.copy(), new_cum)
+    dev1 = loop._plan_args()
+    assert dev1 is not dev0
+    assert float(dev1[1][0, 0, 0]) == 0.5
+
+
+def test_merge_metrics_unbiased_mean():
+    mbs = [{"loss": np.float32(v), "n": np.float32(1.0)}
+           for v in (1.0, 2.0, 3.0, 4.0)]
+    acc = {}
+    for m in mbs:
+        acc = _merge_metrics(acc, m)
+    out = _finalize_metrics(acc, len(mbs))
+    assert abs(out["loss"] - 2.5) < 1e-6          # old (a+b)/2 gave 3.125
+    assert out["n"] == 4.0                        # non-mean keys still summed
+
+
+def test_skewparams_default_not_shared():
+    cfg = get_arch("olmoe-1b-7b-smoke")
+    a = rm.MoEReshaper(cfg, 2, ep_ranks=2)
+    default_tau = a.params.tau
+    a.params.tau = 99.0                           # what _apply_updates does
+    b = rm.MoEReshaper(cfg, 2, ep_ranks=2)
+    assert b.params.tau == default_tau
+    assert a.params is not b.params
+
+
+# ------------------------------------------------ vectorized vs loop specs
+
+def _mk_rs(cls, L=4, E=16, R=4, ranks=4, mode="sbr", seed=0):
+    cfg = ArchConfig(name="t", family="moe", num_layers=L, d_model=64,
+                     n_heads=2, n_kv_heads=2, d_ff=256, vocab=256,
+                     moe=MoECfg(num_experts=E, top_k=2, expert_d_ff=256,
+                                max_replicas=R))
+    return cls(cfg, L, ep_ranks=ranks,
+               params=SkewParams(eta=0.0, tau=0.1), phase1_steps=1,
+               mode=mode)
+
+
+def _randomize(rs, rng, steps=3):
+    """Drive real mitigation steps so plans leave the identity state."""
+    L, E = rs.nl, rs.cfg.moe.num_experts
+    for _ in range(steps):
+        counts = rng.gamma(1.0, 100.0, (L, E)) + np.eye(L, E) * 5000
+        rs.observe(counts, rng.integers(0, 50, L))
+        rs.step()
+
+
+def test_vectorized_methods_match_loop_refs():
+    rng = np.random.default_rng(0)
+    for (L, E, R, ranks) in [(2, 8, 4, 2), (4, 16, 2, 4), (8, 32, 4, 8)]:
+        rs = _mk_rs(rm.MoEReshaper, L, E, R, ranks)
+        _randomize(rs, rng)
+        for l in range(L):
+            # rank_loads: the loop spec computed fracs in f32 (see
+            # reference docstring) -> f32-level tolerance
+            np.testing.assert_allclose(
+                rs.rank_loads(l), rm.rank_loads_loop(rs, l), rtol=1e-6)
+            for e in range(E):
+                assert abs(rs._current_frac(l, e) -
+                           rm.current_frac_loop(rs, l, e)) < 1e-9
+        np.testing.assert_allclose(
+            rs.rank_loads_all(),
+            np.stack([rm.rank_loads_loop(rs, l) for l in range(L)]),
+            rtol=1e-6)
+        # waterfill: vectorized write == loop-reference row
+        loads = rs.rank_loads(0)
+        hot = int(np.argmax(rs._ema_expert[0]))
+        helpers = [h for h in range(ranks)
+                   if h != rs.layout.rank_of_expert(hot)][:R - 1]
+        if helpers:
+            ref_slots, ref_cum = rm.waterfill_row_loop(
+                rs, 0, hot, helpers, loads, boost=1.3)
+            rs._waterfill(0, hot, helpers, loads, boost=1.3)
+            np.testing.assert_array_equal(rs.plan_slots[0, hot], ref_slots)
+            np.testing.assert_array_equal(rs.plan_cum[0, hot], ref_cum)
+
+
+@pytest.mark.parametrize("mode", ["sbr", "sbk"])
+def test_full_step_decisions_match_loop_reshaper(mode):
+    """The restructured/batched step() must make bit-identical decisions to
+    the pre-vectorization sequential implementation (LoopReshaper)."""
+    rng = np.random.default_rng(1)
+    vec = _mk_rs(rm.MoEReshaper, 8, 32, 4, 8, mode)
+    ref = _mk_rs(rm.LoopReshaper, 8, 32, 4, 8, mode)
+    for _ in range(8):
+        counts = rng.gamma(1.0, 100.0, (8, 32)) + np.eye(8, 32) * 4000
+        dropped = rng.integers(0, 50, 8)
+        vec.observe(counts, dropped)
+        ref.observe(counts, dropped)
+        ps_v, pc_v, mig_v = vec.step()
+        ps_r, pc_r, mig_r = ref.step()
+        np.testing.assert_array_equal(ps_v, ps_r)
+        np.testing.assert_array_equal(pc_v, pc_r)
+        assert [(m.layer, m.src_slot, m.dst_slot) for m in mig_v] == \
+               [(m.layer, m.src_slot, m.dst_slot) for m in mig_r]
+    assert vec.active == ref.active
+    assert vec.spare_owner == ref.spare_owner
+    np.testing.assert_array_equal(vec.backlog, ref.backlog)
+    assert [(e.layer, e.hot_expert, e.fraction, e.phase)
+            for e in vec.events] == \
+           [(e.layer, e.hot_expert, e.fraction, e.phase)
+            for e in ref.events]
+
+
+# ------------------------------------------------------- fused gating path
+
+def test_fused_gating_route_matches_topk():
+    import jax
+    import jax.numpy as jnp
+    from repro.models import moe as moe_lib
+    cfg = get_arch("olmoe-1b-7b-smoke")
+    cfg_f = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, fused_gating=True))
+    rng = np.random.default_rng(0)
+    t, dm = 64, cfg.d_model
+    x = jnp.asarray(rng.standard_normal((t, dm)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((dm, cfg.moe.num_experts)) * 0.1,
+                    jnp.float32)
+    plan = moe_lib.identity_plan(cfg, 1)
+    s0, w0, p0, e0, c0 = moe_lib.route(w, x, plan.slots[0], plan.cum[0],
+                                       cfg)
+    s1, w1, p1, e1, c1 = moe_lib.route(w, x, plan.slots[0], plan.cum[0],
+                                       cfg_f)
+    assert c0 is None and c1 is not None
+    np.testing.assert_array_equal(np.asarray(e0), np.asarray(e1))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_allclose(np.asarray(w0), np.asarray(w1), atol=1e-6)
+    # the kernel's free histogram == scatter-add over chosen experts
+    hist = np.zeros(cfg.moe.num_experts, np.int32)
+    np.add.at(hist, np.asarray(e1).reshape(-1), 1)
+    np.testing.assert_array_equal(np.asarray(c1), hist)
+
+    # gradients flow to the router through the probs re-gather
+    def loss(wr):
+        _, wt, probs, _, _ = moe_lib.route(wr, x, plan.slots[0],
+                                           plan.cum[0], cfg_f)
+        return (wt.sum() + probs.sum())
+    g = jax.grad(loss)(w)
+    assert float(jnp.abs(g).sum()) > 0
+
+
+@pytest.mark.slow
+def test_fused_gating_training_matches():
+    cfg = get_arch("olmoe-1b-7b-smoke")
+    cfg_f = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, fused_gating=True))
+    h0 = _loop(cfg, "fused", mb=2, alpha=0.0).run(3)
+    h1 = _loop(cfg_f, "fused", mb=2, alpha=0.0).run(3)
+    for a, b in zip(h0, h1):
+        assert abs(a["loss"] - b["loss"]) < 1e-4
+        np.testing.assert_array_equal(a["expert_counts"],
+                                      b["expert_counts"])

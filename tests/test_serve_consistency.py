@@ -18,6 +18,7 @@ FAMS = ["yi-34b", "gemma3-1b", "olmoe-1b-7b", "rwkv6-1.6b", "zamba2-7b",
 ATOL = {"zamba2-7b": 0.25, "whisper-base": 0.15}
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", FAMS)
 def test_decode_matches_forward(arch):
     cfg = get_arch(arch + "-smoke")

@@ -4,6 +4,7 @@ remat choice — loss goes down, skew goes down, nothing breaks."""
 import dataclasses
 
 import numpy as np
+import pytest
 
 from repro.configs import get_arch
 from repro.configs.base import reduced
@@ -15,6 +16,7 @@ from repro.runtime.loop import LoopConfig, TrainLoop
 from repro.runtime.train import TrainHyper
 
 
+@pytest.mark.slow
 def test_train_loss_decreases():
     cfg = reduced(get_arch("paper-moe-100m"), layers=2, d_model=64,
                   vocab=256)
@@ -29,6 +31,7 @@ def test_train_loss_decreases():
     assert last < first, (first, last)
 
 
+@pytest.mark.slow
 def test_reshape_mitigation_live_in_training():
     """Skewed token classes -> routing hot spots; the reshaper must not
     increase drops, and must actually fire + change the plan."""
@@ -55,6 +58,7 @@ def test_reshape_mitigation_live_in_training():
     assert not np.array_equal(loop.plan_cum, identity_cum)  # plan changed
 
 
+@pytest.mark.slow
 def test_whisper_end_to_end_step():
     cfg = get_arch("whisper-base-smoke")
     stream = TokenStream(vocab=cfg.vocab, seq_len=16, global_batch=4)
