@@ -15,17 +15,22 @@ def main() -> None:
                     choices=["all", "sim", "runtime", "maestro"])
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as a JSON perf artifact")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: only the fast A/B comparison benches "
+                         "of the runtime suite")
     args = ap.parse_args()
 
     sys.path.insert(0, "src")
     suites = []
-    if args.suite in ("all", "sim"):
+    if args.suite in ("all", "sim") and not args.smoke:
         from benchmarks import paper_sim
         suites.append(("sim", paper_sim.run))
     if args.suite in ("all", "runtime"):
         from benchmarks import runtime_bench
-        suites.append(("runtime", runtime_bench.run))
-    if args.suite in ("all", "maestro"):
+        suites.append(("runtime",
+                       (lambda: runtime_bench.run(smoke=True))
+                       if args.smoke else runtime_bench.run))
+    if args.suite in ("all", "maestro") and not args.smoke:
         from benchmarks import maestro_bench
         suites.append(("maestro", maestro_bench.run))
 

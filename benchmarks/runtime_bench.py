@@ -262,6 +262,66 @@ def bench_reshaper_latency():
     return rows
 
 
+def bench_serve_throughput():
+    """Ours: continuous-batching ServeEngine vs the old static BatchedServer
+    loop at mixed prompt lengths.  The static path pays one decode dispatch
+    per prompt token and per generated token, and must process each prompt
+    length as its own lockstep batch; the engine runs chunked batched
+    prefill + multi-token decode ticks over a continuously re-filled slot
+    pool, with tick composition chosen by the Maestro min-FRT rule."""
+    from repro.models import lm as lm_lib
+    from repro.runtime.serve import BatchedServer
+
+    cfg = get_arch("gemma3-1b-smoke")
+    params = lm_lib.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    # mixed traffic: prompt lengths AND response budgets vary per request
+    lens = [4, 12, 20, 28] * 2
+    news = [24, 8, 16, 4, 8, 24, 4, 16]
+    prompts = [rng.integers(1, cfg.vocab, (l,)).astype(np.int32)
+               for l in lens]
+    groups = {}
+    for p, n in zip(prompts, news):
+        groups.setdefault(len(p), []).append((p, n))
+
+    srv = BatchedServer(cfg, params, max_len=96, slots=4,
+                        prefill_chunk=16, decode_chunk=8)
+    n_tok = sum(news)                            # useful tokens per pass
+
+    def run_static():
+        # the old server batches in lockstep: one rectangular batch per
+        # prompt length, decoded to the LONGEST response in the group
+        for g in groups.values():
+            srv.generate_static(np.stack([p for p, _ in g]),
+                                max_new=max(n for _, n in g))
+
+    def run_engine():
+        eng = srv.engine()
+        reqs = [eng.submit(p, max_new=n) for p, n in zip(prompts, news)]
+        eng.run_until_done()
+        assert all(r.done.is_set() for r in reqs)
+
+    rows = []
+    times = {}
+    for name, fn in (("static", run_static), ("continuous", run_engine)):
+        fn()                                     # warm the jits
+        trials = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            fn()
+            trials.append(time.perf_counter() - t0)
+        t = sorted(trials)[1]
+        times[name] = t
+        rows.append((f"serve_throughput/{name}", t * 1e6,
+                     f"tok_s={n_tok / t:.1f};requests={len(prompts)};"
+                     f"mixed_plens={sorted(set(lens))};"
+                     f"max_new={min(news)}-{max(news)}"))
+    rows.append(("serve_throughput/speedup", 0.0,
+                 f"continuous_over_static="
+                 f"{times['static'] / times['continuous']:.2f}x"))
+    return rows
+
+
 def bench_kernels():
     """Kernel microbenchmarks (jnp chunked path timings on CPU + numerics
     vs oracle; the Pallas kernels are TPU-target, validated in tests)."""
@@ -324,17 +384,20 @@ def bench_kernels():
     return rows
 
 
-def run():
+def run(smoke: bool = False):
     import gc
     rows = []
-    # timing-sensitive comparisons (step_path, reshaper) run FIRST: the
-    # long-running Amber benches leave the allocator/caches warm in ways
+    # timing-sensitive comparisons (step_path, serve, reshaper) run FIRST:
+    # the long-running Amber benches leave the allocator/caches warm in ways
     # that skew both sides of a later A/B comparison; gc between benches
     # frees each bench's loops/params before the next one times anything.
-    for fn in (bench_step_path, bench_reshaper_latency,
-               bench_pause_latency, bench_breakpoint_tau,
-               bench_fault_tolerance, bench_metric_overhead,
-               bench_moe_reshape, bench_kernels):
+    # smoke=True (CI) keeps just the A/B comparisons that gate PRs.
+    fns = (bench_step_path, bench_serve_throughput, bench_reshaper_latency)
+    if not smoke:
+        fns += (bench_pause_latency, bench_breakpoint_tau,
+                bench_fault_tolerance, bench_metric_overhead,
+                bench_moe_reshape, bench_kernels)
+    for fn in fns:
         rows.extend(fn())
         gc.collect()
     return rows

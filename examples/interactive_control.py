@@ -64,6 +64,13 @@ th.join()
 print(f"\nran {len(hist)} steps; lr_scale now {loop.lc.lr_scale}; "
       f"breakpoints hit: {loop.hit_breakpoints}")
 print(f"control log: {[(r.kind, r.step, r.microbatch) for r in ctl.log]}")
+step_costs = {k: round(v, 4) for k, v in loop.engine.costs.snapshot().items()
+              if k.startswith("train")}
+print(f"engine jobs: {loop.engine.jobs_run}; measured step costs (s): "
+      f"{step_costs}")
+print(f"step-path decisions tail: "
+      f"{[d['choice'] for d in loop.engine.decisions[-5:]]} "
+      f"(granulated while interactivity was live, fused while idle)")
 
 # ---- crash & recover ------------------------------------------------------
 print("\nsimulating crash; recovering from checkpoint + control-replay log…")

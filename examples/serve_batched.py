@@ -1,44 +1,94 @@
-"""Batched serving demo: prefill + decode with KV/SSM caches across three
-architecture families (attention / sliding-window / recurrent), plus the
-Maestro view of serving: prefill is the blocking 'build' region, decode the
-pipelined 'probe' region.
+"""Continuous-batching serving through the engine layer: mixed-length
+requests join/evict a slot pool, prefill runs in chunked batches, tick
+composition is the Maestro min-FRT choice — and the stream answers
+pause/inspect/update control messages MID-GENERATION, just like training.
 
   PYTHONPATH=src python examples/serve_batched.py
 """
+import threading
 import time
 
 import numpy as np
 import jax
 
 from repro.configs import get_arch
-from repro.core.regions import Op, Workflow, regions, schedule
+from repro.core import messages as M
+from repro.core.regions import Op, Workflow, schedule
+from repro.engine import ServeEngine, serve_tick_workflow
 from repro.models import lm
 from repro.runtime.serve import BatchedServer
 
 rng = np.random.default_rng(0)
 
+# ---- throughput: continuous batching vs the old static loop ---------------
 for arch in ("yi-34b-smoke", "gemma3-1b-smoke", "rwkv6-1.6b-smoke"):
     cfg = get_arch(arch)
     params = lm.init(cfg, jax.random.PRNGKey(0))
-    srv = BatchedServer(cfg, params, max_len=64)
-    prompts = rng.integers(1, cfg.vocab, (4, 12)).astype(np.int32)
+    srv = BatchedServer(cfg, params, max_len=96, slots=4,
+                        prefill_chunk=16, decode_chunk=8)
+    lens, news = [4, 12, 20, 28], [16, 8, 12, 6]
+    prompts = [rng.integers(1, cfg.vocab, (l,)).astype(np.int32)
+               for l in lens]
+    eng = srv.engine()
+    reqs = [eng.submit(p, max_new=n) for p, n in zip(prompts, news)]
+    eng.run_until_done()                                  # warm the jits
+    reqs = [eng.submit(p, max_new=n) for p, n in zip(prompts, news)]
     t0 = time.time()
-    out = srv.generate(prompts, max_new=12, temperature=0.8, seed=7)
+    eng.run_until_done()
     dt = time.time() - t0
-    print(f"{arch:24s} batch=4 prefill=12 decode=12 "
-          f"-> {out.shape} in {dt:.2f}s "
-          f"({4 * 12 / dt:.1f} tok/s decode)")
+    print(f"{arch:24s} mixed plens={lens} max_new={news} "
+          f"-> {sum(news)} tokens in {dt:.2f}s "
+          f"({sum(news) / dt:.1f} tok/s, {eng.tick_no} ticks, "
+          f"jobs={eng.engine.jobs_run})")
 
-# Maestro's region view of a serving pipeline: the prefill (build) must
-# complete before decode (probe) streams — same machinery as Ch.4.
-wf = Workflow()
+# ---- control plane mid-stream --------------------------------------------
+cfg = get_arch("gemma3-1b-smoke")
+params = lm.init(cfg, jax.random.PRNGKey(0))
+eng = ServeEngine(cfg, params, max_len=96, slots=2, prefill_chunk=8,
+                  decode_chunk=2)
+ctl = eng.engine.controller
+for i in range(4):
+    eng.submit(rng.integers(1, cfg.vocab, (6 + 4 * i,)).astype(np.int32),
+               max_new=24)
+
+
+def user_session():
+    time.sleep(0.3)
+    print("\n[user] >> pause (mid-generation)")
+    r = ctl.send(M.pause()).wait(60)
+    print(f"[user] paused at tick {r['paused_at'][0]}")
+    info = ctl.send(M.inspect()).wait(60)          # answered WHILE paused
+    busy = [s for s in info["slots"] if s]
+    print(f"[user] inspect while paused: tick={info['tick']} "
+          f"queue={info['queue_depth']} slots={busy}")
+    print(f"[user] engine costs: "
+          f"{ {k: round(v, 4) for k, v in info['engine']['costs'].items()} }")
+    print("[user] >> update max_prefill_defer=1 (hot reconfiguration)")
+    ctl.send(M.update(max_prefill_defer=1)).wait(60)
+    print("[user] >> resume")
+    ctl.send(M.resume()).wait(60)
+
+
+th = threading.Thread(target=user_session)
+th.start()
+eng.run_until_done()
+th.join()
+done = eng.tokens_out
+print(f"\nstream finished under control: {done} tokens over {eng.tick_no} "
+      f"ticks; decisions tail: "
+      f"{[d['choice'] for d in eng.engine.decisions[-6:]]}")
+
+# ---- the Maestro region view the engine schedules with --------------------
+wf = serve_tick_workflow(decode_slots=2, decode_chunk=4, prefill_tokens=64,
+                         t_token=0.01)
+print("\nserve-tick regions (Maestro):", [sorted(r) for r in schedule(wf)])
+wf2 = Workflow()
 for op in [Op("requests", "scan", 1.0, 1.0, 100),
            Op("prefill", "join", 5.0, 1.0),
            Op("decode", "op", 1.0, 16.0),
            Op("stream_out", "sink", 0.1, 1.0)]:
-    wf.add_op(op)
-wf.add_edge("requests", "prefill", blocking=True, port="build")
-wf.add_edge("prefill", "decode")
-wf.add_edge("decode", "stream_out")
-print("\nserving regions (Maestro):",
-      [sorted(r) for r in schedule(wf)])
+    wf2.add_op(op)
+wf2.add_edge("requests", "prefill", blocking=True, port="build")
+wf2.add_edge("prefill", "decode")
+wf2.add_edge("decode", "stream_out")
+print("serving pipeline regions:", [sorted(r) for r in schedule(wf2)])

@@ -17,6 +17,47 @@ from typing import Any, Callable, Dict, List, Optional
 from repro.core.messages import ControlMessage, LogRecord
 
 
+def _json_safe(x):
+    """Durable-log encoding: numpy / jax arrays and the small control-plane
+    dataclasses (Migration) become tagged JSON values instead of raising
+    TypeError — a dropped ``plan`` record silently breaks §2.6.2 recovery."""
+    import dataclasses as _dc
+
+    import numpy as _np
+    if isinstance(x, dict):
+        return {k: _json_safe(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_json_safe(v) for v in x]
+    if isinstance(x, _np.integer):
+        return int(x)
+    if isinstance(x, _np.floating):
+        return float(x)
+    if hasattr(x, "__array__") and not isinstance(x, (str, bytes)):
+        a = _np.asarray(x)
+        return {"__ndarray__": a.tolist(), "dtype": str(a.dtype)}
+    if _dc.is_dataclass(x) and not isinstance(x, type):
+        return {"__dataclass__": type(x).__name__,
+                "fields": {f.name: _json_safe(getattr(x, f.name))
+                           for f in _dc.fields(x)}}
+    return x
+
+
+def _json_restore(x):
+    if isinstance(x, dict):
+        if "__ndarray__" in x:
+            import numpy as _np
+            return _np.asarray(x["__ndarray__"], dtype=x["dtype"])
+        if "__dataclass__" in x:
+            from repro.core import reshape_moe as _rm
+            cls = getattr(_rm, x["__dataclass__"], None)
+            fields = {k: _json_restore(v) for k, v in x["fields"].items()}
+            return cls(**fields) if cls is not None else fields
+        return {k: _json_restore(v) for k, v in x.items()}
+    if isinstance(x, list):
+        return [_json_restore(v) for v in x]
+    return x
+
+
 class Controller:
     def __init__(self):
         self.mailbox: "queue.Queue[ControlMessage]" = queue.Queue()
@@ -44,6 +85,7 @@ class Controller:
         with open(path) as f:
             for line in f:
                 d = _json.loads(line)
+                d["payload"] = _json_restore(d["payload"])
                 out.append(LogRecord(**d))
         return out
 
@@ -60,13 +102,23 @@ class Controller:
         self.log.append(rec)
         if self.durable_log_path and msg.kind in ("update", "plan", "pause",
                                                   "resume"):
-            import dataclasses as _dc
             import json as _json
+            d = {"kind": rec.kind, "payload": _json_safe(rec.payload),
+                 "seq": rec.seq, "step": rec.step,
+                 "microbatch": rec.microbatch}
             try:
-                with open(self.durable_log_path, "a") as f:
-                    f.write(_json.dumps(_dc.asdict(rec)) + "\n")
+                line = _json.dumps(d)
             except TypeError:
-                pass                      # non-serializable payload (plan)
+                # a payload type _json_safe doesn't model must not kill the
+                # worker's poll, but it must not vanish silently either:
+                # log a tagged repr and warn — replay will surface it
+                import warnings as _w
+                d["payload"] = {"__unserializable__": repr(rec.payload)}
+                line = _json.dumps(d)
+                _w.warn(f"durable log: {rec.kind} payload not "
+                        f"JSON-serializable; logged as repr")
+            with open(self.durable_log_path, "a") as f:
+                f.write(line + "\n")
         if msg.kind == "pause":
             self.paused = True
             t0 = self._sent_at.pop(msg.seq, None)

@@ -51,6 +51,43 @@ class MeanModelEstimator:
         return ps, ph, eps
 
 
+class CostBook:
+    """Online per-job-kind cost estimates for the engine layer.
+
+    The engine measures every job it runs (train step on either path, serve
+    prefill/decode ticks, checkpoints) and feeds the wall time back here; the
+    Maestro decision code reads the estimates out as region ``cost_per_tuple``
+    values, so scheduling choices track the machine actually being run on
+    instead of a static model.  Backed by per-kind ``EMAEstimator``s — the
+    same mean/eps estimator family as the Reshape workload model (§3.3.2),
+    applied to job runtimes."""
+
+    def __init__(self, beta: float = 0.6):
+        self._beta = beta
+        self._est: Dict[str, "EMAEstimator"] = {}
+
+    def observe(self, kind: str, seconds: float) -> None:
+        if kind not in self._est:
+            self._est[kind] = EMAEstimator(self._beta)
+        self._est[kind].add(seconds)
+
+    def estimate(self, kind: str, default: float | None = None):
+        """EMA of measured runtimes for ``kind``; ``default`` when unmeasured
+        (the engine's bootstrap: decide with priors until jobs have run)."""
+        est = self._est.get(kind)
+        if est is None or est.value is None:
+            return default
+        return float(est.value)
+
+    def n_kinds(self) -> int:
+        return len(self._est)
+
+    def snapshot(self) -> Dict[str, float]:
+        """JSON-safe view for Inspect replies / perf artifacts."""
+        return {k: float(e.value) for k, e in self._est.items()
+                if e.value is not None}
+
+
 class EMAEstimator:
     """Streaming variant used by the MoE runtime (per-slot EMAs)."""
 

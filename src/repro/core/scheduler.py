@@ -104,6 +104,31 @@ def choose(wf: Workflow, cm: CostModel) -> Tuple[FrozenSet[Edge], dict]:
                   "all": [(f, b, sorted(c)) for f, b, c in scored]}
 
 
+def completion_time(wf: Workflow, cm: CostModel) -> float:
+    """Total time to drain the workflow: every region paid in full.  The
+    engine's *throughput* objective — compare with ``first_response_time``,
+    the *interactive* objective; the online scheduler picks which of the two
+    to minimize depending on whether a user is waiting (result-awareness at
+    the job level)."""
+    cards = cardinalities(wf)
+    return sum(region_full_time(wf, r, cards, cm) for r in regions(wf))
+
+
+def score_choices(wf: Workflow, cm: CostModel,
+                  objective: str = "frt") -> List[Tuple[float, float,
+                                                        FrozenSet[Edge]]]:
+    """Online API: score every materialization choice under an objective
+    ('frt' or 'completion'); sorted best-first, tie-broken on bytes."""
+    assert objective in ("frt", "completion"), objective
+    scored = []
+    for c in enumerate_choices(wf):
+        t = first_response_time(wf, c, cm) if objective == "frt" \
+            else completion_time(wf.materialize(c), cm)
+        scored.append((t, materialized_bytes(wf, c, cm), c))
+    scored.sort(key=lambda x: (x[0], x[1]))
+    return scored
+
+
 # ------------------------------------------------------------- ML mapping
 
 @dataclasses.dataclass

@@ -1,0 +1,16 @@
+"""Online Maestro: the unified engine layer.
+
+Training and serving run as region-structured, result-aware *jobs* under one
+Amber-style executor — see ``engine.engine.Engine`` (control plane + cost
+book + decisions), ``engine.jobs`` (the job -> region-workflow mapping), and
+``engine.serve.ServeEngine`` (continuous batching).  ``runtime.loop`` and
+``runtime.serve`` are clients of this layer.
+"""
+from repro.engine.engine import Engine
+from repro.engine.jobs import (Job, checkpoint_workflow, serve_tick_workflow,
+                               train_step_workflow)
+from repro.engine.serve import Request, ServeEngine, build_slot_tick
+
+__all__ = ["Engine", "Job", "Request", "ServeEngine", "build_slot_tick",
+           "checkpoint_workflow", "serve_tick_workflow",
+           "train_step_workflow"]

@@ -1,0 +1,163 @@
+"""The Engine: one Amber-style executor under training *and* serving.
+
+The engine owns the control plane — the :class:`Controller` mailbox, the
+durable control-replay log, and the registered breakpoints — and runs *jobs*
+(train step, serve prefill, serve decode batch, checkpoint) expressed as
+Maestro region workflows (``engine.jobs``).  Every job it runs is timed and
+fed back into a :class:`CostBook`, so the scheduling decisions are made
+against measured costs:
+
+* ``choose_step_path`` — fused vs granulated training step.  When any
+  interactivity is live (pending or replaying message, registered
+  breakpoint, paused) the granulated path is *required* (messages must land
+  at their per-microbatch points); otherwise the engine scores both job
+  workflows under the ``completion`` objective and takes the cheaper one.
+  This subsumes the PR-1 ``auto`` heuristic: the heuristic's answer falls
+  out of the cost model instead of being hard-coded.
+* ``choose_serve_tick`` — decode-only vs prefill tick composition for the
+  serving engine: min first-response-time with an aging bound so prefills
+  cannot starve (§4.5's min-FRT objective applied online).
+
+Workers (``TrainLoop``, ``ServeEngine``) are engine *clients*: they hand the
+engine their inspect callback and their job thunks and let it decide.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.breakpoints import GlobalCountBreakpoint, LocalBreakpoint
+from repro.core.controller import Controller
+from repro.core.estimator import CostBook
+from repro.core.scheduler import (CostModel, completion_time,
+                                  first_response_time)
+from repro.engine import jobs as J
+
+
+class Engine:
+    def __init__(self, controller: Optional[Controller] = None,
+                 durable_log: Optional[str] = None,
+                 max_prefill_defer: int = 4):
+        self.controller = controller or Controller()
+        if durable_log is not None and self.controller.durable_log_path is None:
+            self.controller.attach_durable_log(durable_log)
+        self.costs = CostBook()
+        self.local_bps: List[Any] = []
+        self.global_bps: List[Any] = []
+        self.decisions: List[Dict[str, Any]] = []
+        self.jobs_run: Dict[str, int] = {}
+        self.max_prefill_defer = max_prefill_defer
+        self._prefill_defer = 0
+        self._cm = CostModel(parallelism=1.0)
+
+    # ---------------------------------------------------------- control plane
+    def poll(self, step: int, microbatch: int,
+             inspect_fn: Optional[Callable[[str], Any]] = None
+             ) -> Dict[str, Any]:
+        r = self.controller.poll(step, microbatch, inspect_fn)
+        # breakpoint registrations live on the engine, not the worker
+        for bp in self.controller.breakpoints:
+            if isinstance(bp, GlobalCountBreakpoint):
+                self.global_bps.append(bp)
+            elif isinstance(bp, LocalBreakpoint):
+                self.local_bps.append(bp)
+        self.controller.breakpoints = []
+        return r
+
+    def interactive(self) -> bool:
+        """Any live control demand that requires mid-step granularity."""
+        c = self.controller
+        return (c.paused or c.stopped or not c.mailbox.empty()
+                or bool(self.local_bps) or bool(self.global_bps)
+                or c.is_replaying())
+
+    # ----------------------------------------------------------------- jobs
+    def run_job(self, job: J.Job, fn: Callable[[], Any]) -> Any:
+        """Execute a job thunk, feed its measured runtime back into the cost
+        book (per token when the job reports a token count, else per job)."""
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+        self.observe(job, dt)
+        return out
+
+    def observe(self, job: J.Job, seconds: float) -> None:
+        self.jobs_run[job.kind] = self.jobs_run.get(job.kind, 0) + 1
+        if self.jobs_run[job.kind] == 1 or (job.meta or {}).get("cold"):
+            return          # compile-carrying runs (first per kind, or a
+            #                 shape the client knows is freshly specialized)
+            #                 must not enter the EMA — a compile-inflated
+            #                 cost would wedge the decisions
+        self.costs.observe(job.kind, seconds)
+        if job.tokens:
+            self.costs.observe(job.kind + "_per_tok", seconds / job.tokens)
+
+    def _decide(self, kind: str, choice: str, **detail) -> str:
+        self.decisions.append({"decision": kind, "choice": choice, **detail})
+        if len(self.decisions) > 512:          # bounded audit trail
+            del self.decisions[:256]
+        return choice
+
+    def inspect(self) -> Dict[str, Any]:
+        """Engine-level state for Inspect replies."""
+        return {"costs": self.costs.snapshot(),
+                "jobs_run": dict(self.jobs_run),
+                "decisions_tail": self.decisions[-5:],
+                "breakpoints": len(self.local_bps) + len(self.global_bps)}
+
+    # ------------------------------------------------------------- decisions
+    def choose_step_path(self, forced: str = "auto", n_mb: int = 1) -> str:
+        """Fused vs granulated training step (see module docstring)."""
+        if forced in ("fused", "granulated"):
+            return forced
+        if self.interactive():
+            # correctness, and also min-FRT: the control sink's first
+            # response leaves after one microbatch on the granulated path
+            return self._decide("step_path", "granulated",
+                                why="interactive")
+        t_f = self.costs.estimate("train_step_fused")
+        if t_f is None:
+            # explore before exploiting: granulated gets measured whenever
+            # interactivity forces it, so an unmeasured fused path would
+            # otherwise never get a second chance against a measured rival
+            return self._decide("step_path", "fused", why="bootstrap")
+        t_g = self.costs.estimate("train_step_granulated",
+                                  J.COST_DEFAULTS["train_step_granulated"])
+        scores = {}
+        for path, t_step in (("fused", t_f), ("granulated", t_g)):
+            wf = J.train_step_workflow(path, n_mb, t_step / max(n_mb, 1),
+                                       t_apply=0.0)
+            scores[path] = completion_time(wf, self._cm)
+        best = min(scores, key=scores.get)
+        return self._decide("step_path", best, scores=scores)
+
+    def choose_serve_tick(self, decode_slots: int, prefill_slots: int,
+                          prefill_tokens: int, decode_chunk: int,
+                          prefill_chunk: int) -> str:
+        """Tick composition: 'decode' (short, decode-state slots only) or
+        'prefill' (long, every active slot advances a prefill_chunk)."""
+        if prefill_slots == 0:
+            return "decode"
+        if decode_slots == 0:
+            self._prefill_defer = 0
+            return self._decide("serve_tick", "prefill", why="no_decoders")
+        if self._prefill_defer >= self.max_prefill_defer:
+            self._prefill_defer = 0
+            return self._decide("serve_tick", "prefill", why="aging")
+        t_tok = self.costs.estimate(
+            "serve_decode_per_tok",
+            self.costs.estimate("serve_prefill_per_tok", 1e-3))
+        chunk_now = min(prefill_tokens, prefill_chunk * prefill_slots)
+        wf_d = J.serve_tick_workflow(decode_slots, decode_chunk, 0, t_tok)
+        wf_p = J.serve_tick_workflow(decode_slots, prefill_chunk,
+                                     chunk_now, t_tok)
+        frt_d = first_response_time(wf_d, frozenset(), self._cm)
+        frt_p = first_response_time(wf_p, frozenset(), self._cm)
+        if frt_d <= frt_p:
+            self._prefill_defer += 1
+            return self._decide("serve_tick", "decode",
+                                frt={"decode": frt_d, "prefill": frt_p},
+                                defer=self._prefill_defer)
+        self._prefill_defer = 0
+        return self._decide("serve_tick", "prefill",
+                            frt={"decode": frt_d, "prefill": frt_p})

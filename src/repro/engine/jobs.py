@@ -1,0 +1,129 @@
+"""Jobs: the unit the engine schedules, expressed as Maestro regions.
+
+Everything the runtime does — a train step on either control path, a serve
+prefill chunk, a decode batch, a checkpoint — is described as a small
+region-structured workflow (paper Ch.4) whose operator costs come from the
+engine's :class:`~repro.core.estimator.CostBook` (measured online, not
+modeled).  The engine then applies the result-aware objectives from
+``core.scheduler`` to the workflow:
+
+* ``first_response_time`` — time to the first tuple out of the sink
+  (first microbatch metrics for training, first emitted token for serving);
+* ``completion_time`` — time to drain every region.
+
+Two decisions are made this way today:
+
+* **train step path** (fused vs granulated): the granulated workflow puts
+  every microbatch in its own region with a pipelined edge from the first
+  microbatch to the control sink — its FRT is one microbatch, the Amber
+  control latency.  The fused workflow is a single region — minimal
+  completion time, but the control sink waits for the whole step.
+* **serve tick composition** (decode-only vs prefill): prefill is a
+  blocking region upstream of decode — admitting a prefill chunk delays
+  the first token out of the decode region by the full prefill cost, which
+  is exactly why short decode batches preempt long prefills under min-FRT.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.regions import Op, Workflow
+
+
+@dataclasses.dataclass(frozen=True)
+class Job:
+    """One schedulable unit of runtime work.
+
+    ``kind`` doubles as the CostBook key, so every job the engine runs
+    refines the cost model used to schedule the next one."""
+    kind: str                 # train_step_fused | train_step_granulated |
+    #                           serve_prefill | serve_decode | checkpoint
+    tokens: int = 0           # data-plane size (tokens processed)
+    meta: Optional[dict] = None
+
+
+# ------------------------------------------------------------------ training
+
+def train_step_workflow(path: str, n_mb: int, t_mb: float,
+                        t_apply: float) -> Workflow:
+    """The training step as a region workflow.
+
+    granulated: mb_0 -> mb_1 -> ... -> apply with *blocking* edges (each
+    microbatch is its own region; region boundaries are the Amber control
+    points) and a pipelined edge mb_0 -> control (the first metrics/poll
+    response leaves after one microbatch).
+    fused: one region {step} -> control; nothing escapes until the whole
+    scanned step completes.
+    """
+    wf = Workflow()
+    if path == "fused":
+        wf.add_op(Op("step", "ml", cost_per_tuple=n_mb * t_mb + t_apply,
+                     source_cardinality=1.0))
+        wf.add_op(Op("control", "sink", cost_per_tuple=0.0))
+        wf.add_edge("step", "control")
+        return wf
+    assert path == "granulated", path
+    for i in range(n_mb):
+        wf.add_op(Op(f"mb_{i}", "ml", cost_per_tuple=t_mb,
+                     source_cardinality=1.0 if i == 0 else 0.0))
+    wf.add_op(Op("apply", "ml", cost_per_tuple=t_apply))
+    wf.add_op(Op("control", "sink", cost_per_tuple=0.0))
+    for i in range(n_mb - 1):
+        wf.add_edge(f"mb_{i}", f"mb_{i + 1}", blocking=True)
+    wf.add_edge(f"mb_{n_mb - 1}", "apply", blocking=True)
+    wf.add_edge("mb_0", "control")
+    return wf
+
+
+# ------------------------------------------------------------------- serving
+
+def serve_tick_workflow(decode_slots: int, decode_chunk: int,
+                        prefill_tokens: int, t_token: float,
+                        t_dispatch: float = 0.0) -> Workflow:
+    """One serve tick as a region workflow.
+
+    ``prefill_tokens = 0`` models a decode-only tick: the decode region is
+    the sink's region and only pays its pipeline fill (one chunk of
+    ``decode_chunk`` positions).  With pending prefill work the prefill op
+    sits behind a *blocking* edge into decode — the whole prefill chunk is
+    paid before the first token streams out.  first_response_time on these
+    two candidates is the admission/composition decision.
+    """
+    wf = Workflow()
+    wf.add_op(Op("requests", "scan", cost_per_tuple=0.0,
+                 source_cardinality=float(max(decode_slots, 1))))
+    wf.add_op(Op("decode", "ml",
+                 cost_per_tuple=t_token * decode_chunk + t_dispatch))
+    wf.add_op(Op("stream_out", "sink", cost_per_tuple=0.0))
+    wf.add_edge("requests", "decode")
+    wf.add_edge("decode", "stream_out")
+    if prefill_tokens > 0:
+        wf.add_op(Op("pending", "scan", cost_per_tuple=0.0,
+                     source_cardinality=float(prefill_tokens)))
+        wf.add_op(Op("prefill", "ml", cost_per_tuple=t_token))
+        wf.add_edge("pending", "prefill")
+        wf.add_edge("prefill", "decode", blocking=True)
+    return wf
+
+
+def checkpoint_workflow(t_save: float) -> Workflow:
+    """Checkpoint as a blocking region between steps (the §2.6 barrier)."""
+    wf = Workflow()
+    wf.add_op(Op("snapshot", "ml", cost_per_tuple=t_save,
+                 source_cardinality=1.0))
+    wf.add_op(Op("durable", "sink", cost_per_tuple=0.0))
+    wf.add_edge("snapshot", "durable", blocking=True)
+    return wf
+
+
+COST_DEFAULTS: Dict[str, float] = {
+    # bootstrap priors (seconds) used until the CostBook has measurements;
+    # relative order is what matters: fused step < granulated step,
+    # decode tick < prefill chunk.
+    "train_step_fused": 0.05,
+    "train_step_granulated": 0.10,
+    "serve_decode": 0.01,
+    "serve_prefill": 0.05,
+    "checkpoint": 0.50,
+}

@@ -1,0 +1,350 @@
+"""ServeEngine: continuous batching under the Amber control plane.
+
+Serving runs as engine jobs over a fixed pool of *slots*, each slot holding
+one request's KV/SSM cache at its own sequence position (the per-slot state
+is the old ``BatchedServer``'s batch row, promoted to join/evict at tick
+boundaries).  A **tick** is one jitted dispatch that advances every
+participating slot by ``chunk`` positions:
+
+* a *prefill* slot consumes up to ``chunk`` prompt tokens (chunked batched
+  prefill — one dispatch per chunk instead of the old one dispatch per
+  token);
+* a *decode* slot feeds its pending sampled token and keeps sampling
+  in-jit, emitting up to ``chunk`` new tokens per dispatch;
+* a slot whose prompt ends mid-tick transitions prefill -> decode inside
+  the same dispatch.
+
+Between ticks the engine polls the controller mailbox, so Pause / Inspect /
+Update land at tick granularity exactly like the training loop's microbatch
+control points, and while paused the engine keeps answering Inspect —
+serving gets §2.4.4 semantics for free.  Tick *composition* (decode-only vs
+prefill) is a Maestro min-FRT choice over the two candidate region
+workflows (``jobs.serve_tick_workflow``): short decode ticks preempt long
+prefills until the aging bound forces prefill progress.
+
+The per-slot compute is ``jax.vmap`` over the stock ``lm.decode_step`` —
+per-slot positions come from batching the *function*, not from touching the
+block-level cache layouts — and greedy outputs are bit-identical to the old
+token-by-token server (the regression oracle in the tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.breakpoints import GlobalCountBreakpoint, LocalBreakpoint
+from repro.engine.engine import Engine
+from repro.engine.jobs import Job
+from repro.models import lm
+
+
+def sample_traced(logits, key, temp):
+    """In-jit sampler with a *traced* temperature: greedy at temp<=0,
+    categorical otherwise (both branches computed; jnp.where selects)."""
+    greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+    t = jnp.maximum(temp, 1e-6)
+    samp = jax.random.categorical(key, logits / t).astype(jnp.int32)
+    return jnp.where(temp > 0, samp, greedy)
+
+
+def build_slot_tick(cfg: ArchConfig):
+    """Jitted tick: vmap of a per-slot chunk scan over ``lm.decode_step``.
+
+    Per slot: caches (leaves ``[n, 1, S, ...]``), scalar pos, tokens
+    ``[chunk]``, ``n_given`` (how many are prompt/pending tokens — the rest
+    are sampled in-jit), active mask, PRNG key, temperature.  Emits the
+    ``[chunk]`` sampled tokens; position ``j``'s emission is the model's
+    continuation after consuming token ``j``.  Inactive slots run (vmap is
+    rectangular) but their state updates are masked out.
+    """
+
+    def one_slot(params, caches, pos, toks, n_given, active, reset, key,
+                 temp):
+        # a freshly joined slot starts from a zeroed cache row and pos 0 —
+        # folded into the tick so the join costs no eager scatter dispatches
+        caches = jax.tree.map(
+            lambda c: jnp.where(reset, jnp.zeros_like(c), c), caches)
+        pos = jnp.where(reset, 0, pos)
+
+        def body(carry, j):
+            caches, pos, prev, key = carry
+            tok = jnp.where(j < n_given, toks[j], prev)
+            logits, new = lm.decode_step(
+                params, {"caches": caches, "pos": pos}, tok[None, None], cfg)
+            key, sub = jax.random.split(key)
+            nxt = sample_traced(logits[0], sub, temp)
+            return (new["caches"], new["pos"], nxt, key), nxt
+
+        (c2, p2, _, k2), emitted = jax.lax.scan(
+            body, (caches, pos, toks[0], key), jnp.arange(toks.shape[0]))
+        c_f = jax.tree.map(lambda o, n: jnp.where(active, n, o), caches, c2)
+        return (c_f, jnp.where(active, p2, pos),
+                jnp.where(active, k2, key), emitted)
+
+    return jax.jit(jax.vmap(one_slot,
+                            in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0)),
+                   donate_argnums=(1,))
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                   # [plen] int32
+    max_new: int
+    temperature: float = 0.0
+    key: Any = None                      # private PRNG key (sampling)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    prompt_off: int = 0
+    pending_tok: int = -1                # emitted but not yet fed back
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prompt_off < len(self.prompt)
+
+    def output(self) -> np.ndarray:
+        return np.asarray(self.tokens[:self.max_new], np.int32)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, max_len: int = 128,
+                 slots: int = 4, prefill_chunk: int = 16,
+                 decode_chunk: int = 4, engine: Optional[Engine] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.engine = engine or Engine()
+        self.max_len = max_len
+        self.slots = slots
+        self.prefill_chunk = prefill_chunk
+        self.decode_chunk = decode_chunk
+        one = lm.init_cache(cfg, 1, max_len)
+        self.pool = jax.tree.map(
+            lambda x: jnp.zeros((slots,) + x.shape, x.dtype), one["caches"])
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.pos_host = np.zeros((slots,), np.int64)   # device-sync-free view
+        self._reset = np.zeros((slots,), bool)         # zero these rows in-jit
+        self._base_key = jax.random.PRNGKey(seed)
+        self.keys = jax.random.split(self._base_key, slots)
+        self._tick = build_slot_tick(cfg)
+        self._compiled: set = set()            # tick lengths already jitted
+        self.queue: Deque[Request] = deque()
+        self.active: List[Optional[Request]] = [None] * slots
+        self.tick_no = 0
+        self.tokens_out = 0
+        self._rid = itertools.count()
+        self.hit_breakpoints: List[str] = []
+
+    # ------------------------------------------------------------- requests
+    def submit(self, prompt, max_new: int = 16, temperature: float = 0.0,
+               key=None) -> Request:
+        """Queue a request.  ``key`` pins the request's private sampling
+        stream (reproducibility); default derives one from the engine seed
+        and the request id."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert prompt.size >= 1, "empty prompt"
+        need = prompt.size + max_new + max(self.prefill_chunk,
+                                           self.decode_chunk)
+        assert need <= self.max_len, \
+            f"prompt+max_new+chunk={need} exceeds max_len={self.max_len}"
+        rid = next(self._rid)
+        if key is None:
+            key = jax.random.fold_in(self._base_key, rid)
+        req = Request(rid, prompt, max_new, temperature, key=key)
+        self.queue.append(req)
+        return req
+
+    def _evict(self, req: Request) -> None:
+        self.active[req.slot] = None
+        req.slot = -1
+        req.done.set()
+
+    def _admit(self) -> None:
+        """Join queued requests into free slots.  The cache-row zeroing and
+        position reset are deferred into the next tick's jit (the ``reset``
+        mask) — stale recurrent/rolling state must not leak between
+        requests, but eager per-join scatters cost more than the tick's
+        compute at smoke scale.  Only the tiny per-slot PRNG key is written
+        eagerly (one batched scatter for all joiners)."""
+        joined = []
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.popleft()
+                req.slot = slot
+                self.active[slot] = req
+                self._reset[slot] = True
+                self.pos_host[slot] = 0
+                joined.append((slot, req))
+        if not joined:
+            return
+        idx = jnp.asarray([s for s, _ in joined], jnp.int32)
+        self.keys = self.keys.at[idx].set(jnp.stack(
+            [req.key for _, req in joined]))
+
+    # -------------------------------------------------------------- control
+    def _inspect(self, what: str) -> Dict[str, Any]:
+        info = {"tick": self.tick_no, "queue_depth": len(self.queue),
+                "tokens_out": self.tokens_out,
+                "paused": self.engine.controller.paused,
+                "slots": [None if r is None else
+                          {"rid": r.rid, "prompt_off": r.prompt_off,
+                           "plen": len(r.prompt), "out": len(r.tokens),
+                           "max_new": r.max_new}
+                          for r in self.active],
+                "engine": self.engine.inspect()}
+        return info
+
+    def _apply_updates(self, updates: Dict[str, Any]) -> None:
+        if "max_prefill_defer" in updates:
+            self.engine.max_prefill_defer = int(updates["max_prefill_defer"])
+        if "decode_chunk" in updates:
+            self.decode_chunk = int(updates["decode_chunk"])
+        if "prefill_chunk" in updates:
+            self.prefill_chunk = int(updates["prefill_chunk"])
+
+    def _poll(self) -> bool:
+        r = self.engine.poll(self.tick_no, 0, self._inspect)
+        self._apply_updates(r["updates"])
+        return r["stopped"]
+
+    def _check_breakpoints(self, emitted: int) -> None:
+        m = {"emitted": float(emitted), "queue": float(len(self.queue)),
+             "active": float(sum(r is not None for r in self.active)),
+             "tokens_out": float(self.tokens_out)}
+        for bp in self.engine.local_bps:
+            if bp.check(m):
+                self.hit_breakpoints.append(bp.name)
+                self.engine.controller.paused = True
+        for bp in list(self.engine.global_bps):
+            if bp.update([emitted]):
+                self.hit_breakpoints.append(bp.name)
+                self.engine.controller.paused = True
+                self.engine.global_bps.remove(bp)
+
+    # ----------------------------------------------------------------- tick
+    def tick(self) -> bool:
+        """One engine iteration.  Returns False when stopped, True otherwise
+        (including idle ticks).  Control messages land here — between ticks
+        — and Inspect keeps answering while paused (the controller blocks
+        inside poll until Resume)."""
+        if self._poll():
+            return False
+        self._admit()
+        act = [r for r in self.active if r is not None]
+        if not act:
+            return True
+        n_pre = sum(r.prefilling for r in act)
+        n_dec = len(act) - n_pre
+        pre_toks = sum(len(r.prompt) - r.prompt_off
+                       for r in act if r.prefilling)
+        mode = self.engine.choose_serve_tick(
+            n_dec, n_pre, pre_toks, self.decode_chunk, self.prefill_chunk)
+        chunk = self.prefill_chunk if mode == "prefill" else self.decode_chunk
+        # adaptive tick length: no slot needs more than its remaining
+        # horizon, so trim the chunk to the longest one (rounded up to a
+        # power of two — the tick jit specializes on L, and an arbitrary L
+        # would compile once per distinct tail length).  ``cap`` keeps the
+        # tick inside the tightest participant's cache headroom: submit()
+        # reserves a chunk of slack, but a hot chunk-size update could
+        # otherwise leave a near-full slot unable to ever run again.
+        need, cap = 1, chunk
+        for r in act:
+            if mode == "decode" and r.prefilling:
+                continue
+            h = (len(r.prompt) - r.prompt_off) if r.prefilling \
+                else (r.max_new - len(r.tokens))
+            need = max(need, min(h, chunk))
+            cap = min(cap, self.max_len - int(self.pos_host[r.slot]))
+        L = 1
+        while L < need:
+            L *= 2
+        L = min(L, chunk)
+        while L > max(cap, 1):
+            L //= 2
+        toks = np.zeros((self.slots, L), np.int32)
+        n_given = np.ones((self.slots,), np.int32)
+        active = np.zeros((self.slots,), bool)
+        temps = np.zeros((self.slots,), np.float32)
+        part: List[Request] = []
+        for r in act:
+            if mode == "decode" and r.prefilling:
+                continue                      # prefill slots sit this one out
+            if int(self.pos_host[r.slot]) + L > self.max_len:
+                continue                      # defensive: never overrun cache
+            s = r.slot
+            if r.prefilling:
+                g = min(len(r.prompt) - r.prompt_off, L)
+                toks[s, :g] = r.prompt[r.prompt_off:r.prompt_off + g]
+                n_given[s] = g
+            else:
+                toks[s, 0] = r.pending_tok
+            active[s] = True
+            temps[s] = r.temperature
+            part.append(r)
+        if not part:
+            return True
+        cold = L not in self._compiled      # fresh jit specialization: keep
+        self._compiled.add(L)               # its compile time out of the EMA
+        job = Job("serve_" + ("prefill" if mode == "prefill" else "decode"),
+                  tokens=L * len(part), meta={"cold": cold})
+        self.pool, self.pos, self.keys, emitted = self.engine.run_job(
+            job, lambda: jax.block_until_ready(self._tick(
+                self.params, self.pool, self.pos, jnp.asarray(toks),
+                jnp.asarray(n_given), jnp.asarray(active),
+                jnp.asarray(self._reset), self.keys, jnp.asarray(temps))))
+        self._reset[:] = False                # zeroing landed inside the jit
+        self.pos_host[active] += L
+        em = np.asarray(emitted)
+        n_new = 0
+        for r in part:
+            s, g = r.slot, int(n_given[r.slot])
+            if r.prefilling:
+                r.prompt_off += g
+                if r.prefilling:
+                    continue                  # prompt continues next tick
+            need = r.max_new - len(r.tokens)
+            outs = em[s, g - 1:][:need]
+            r.tokens.extend(int(t) for t in outs)
+            n_new += len(outs)
+            if len(r.tokens) >= r.max_new:
+                self._evict(r)
+            else:
+                r.pending_tok = int(em[s, L - 1])
+        self.tokens_out += n_new
+        self._check_breakpoints(n_new)
+        self.tick_no += 1
+        return True
+
+    # ----------------------------------------------------------- convenience
+    def run_until_done(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.tick():
+                return
+            if not self.queue and all(r is None for r in self.active):
+                return
+        raise RuntimeError("serve engine did not drain within max_ticks")
+
+    def generate(self, prompts: np.ndarray, max_new: int = 16,
+                 temperature: float = 0.0, seed=None) -> np.ndarray:
+        """Batch convenience with the old ``BatchedServer.generate``
+        contract: rectangular prompts in, ``[B, max_new]`` tokens out.
+        ``seed`` pins per-request sampling keys, so repeated calls with the
+        same seed reproduce (per request, not per lockstep batch — the
+        old static path shared one key across the batch)."""
+        base = None if seed is None else jax.random.PRNGKey(seed)
+        reqs = [self.submit(p, max_new, temperature,
+                            key=None if base is None
+                            else jax.random.fold_in(base, i))
+                for i, p in enumerate(prompts)]
+        self.run_until_done()
+        return np.stack([r.output() for r in reqs])

@@ -1,11 +1,14 @@
-"""Interactive training loop — the Amber worker on the ML runtime.
+"""Interactive training loop — an engine client on the ML runtime.
 
-Granulated iteration (paper §2.4.3): the loop polls the controller mailbox
-between *microbatches*, so Pause/Inspect/Update take effect within one
-microbatch; while paused it keeps answering Inspect/Update (§2.4.4).
-Local breakpoints are checked on every microbatch's metrics; global COUNT
-breakpoints accumulate across shards/steps.  Reshape (MoEReshaper) observes
-the free load metrics and swaps the routing plan + migrates expert state
+The loop no longer owns the control plane: an :class:`repro.engine.Engine`
+holds the controller mailbox, the durable control-replay log, and the
+registered breakpoints, and the loop submits its work as engine *jobs*
+(train step on either path, checkpoint).  Which step path runs is the
+engine's Maestro decision (``choose_step_path``): granulated whenever
+interactivity is live — the Amber per-microbatch control points (§2.4.3/4)
+— otherwise the cheaper path under the measured cost model (which subsumes
+the old hard-coded ``auto`` heuristic).  Reshape (MoEReshaper) observes the
+free load metrics and swaps the routing plan + migrates expert state
 between steps.  Fault tolerance: checkpoints carry the data-iterator state
 and the control-replay log; ``TrainLoop.recover`` restores and re-applies
 logged messages at their recorded (step, microbatch) points -> bit-exact
@@ -27,6 +30,8 @@ from repro.core.breakpoints import GlobalCountBreakpoint, LocalBreakpoint
 from repro.core.controller import Controller, ReplayingController
 from repro.core.reshape_moe import MoEReshaper
 from repro.data.synthetic import TokenStream
+from repro.engine.engine import Engine
+from repro.engine.jobs import Job
 from repro.models import lm
 from repro.models import moe as moe_lib
 from repro.runtime.train import (TrainHyper, build_fused_step,
@@ -51,14 +56,16 @@ class TrainLoop:
                  loop_cfg: LoopConfig = LoopConfig(),
                  controller: Optional[Controller] = None,
                  reshaper: Optional[MoEReshaper] = None,
-                 seed: int = 0):
+                 seed: int = 0, engine: Optional[Engine] = None):
         self.cfg = cfg
         self.stream = stream
         self.hyper = hyper
         self.lc = loop_cfg
         assert loop_cfg.step_path in ("auto", "fused", "granulated"), \
             loop_cfg.step_path
-        self.controller = controller or Controller()
+        assert engine is None or controller is None, \
+            "pass either an engine or a bare controller, not both"
+        self.engine = engine or Engine(controller=controller)
         self.reshaper = reshaper
         self.state = make_state(cfg, jax.random.PRNGKey(seed))
         self.grad_mb, self.apply, self.migrate = build_grad_step(cfg, hyper)
@@ -73,8 +80,6 @@ class TrainLoop:
                                reshaper.plan_cum.copy())
         else:
             self.plan_slots = self.plan_cum = None
-        self.local_bps: List[LocalBreakpoint] = []
-        self.global_bps: List[GlobalCountBreakpoint] = []
         self.history: List[Dict[str, Any]] = []
         self.ckpt = Checkpointer(self.lc.ckpt_dir) if self.lc.ckpt_every \
             else None
@@ -84,6 +89,20 @@ class TrainLoop:
                 os.path.join(self.lc.ckpt_dir, "control.log"))
         self.hit_breakpoints: List[str] = []
 
+    # the control plane lives on the engine; these views keep the worker's
+    # historical surface (tests, examples, benchmarks) intact
+    @property
+    def controller(self) -> Controller:
+        return self.engine.controller
+
+    @property
+    def local_bps(self) -> List[LocalBreakpoint]:
+        return self.engine.local_bps
+
+    @property
+    def global_bps(self) -> List[GlobalCountBreakpoint]:
+        return self.engine.global_bps
+
     # ------------------------------------------------------------- plumbing
     def _inspect(self, what: str):
         step = int(self.state["step"])
@@ -92,6 +111,8 @@ class TrainLoop:
                 "history_tail": self.history[-3:]}
         if what == "plan" and self.plan_slots is not None:
             info["plan_slots"] = self.plan_slots.tolist()
+        if what == "engine":
+            info["engine"] = self.engine.inspect()
         return info
 
     def _apply_updates(self, updates: Dict[str, Any]) -> None:
@@ -101,19 +122,13 @@ class TrainLoop:
             self.reshaper.params.tau = float(updates["tau"])
 
     def _poll(self, step: int, mb: int) -> bool:
-        r = self.controller.poll(step, mb, self._inspect)
+        r = self.engine.poll(step, mb, self._inspect)
         self._apply_updates(r["updates"])
         if r["plan"] is not None:
             self._set_plan(np.asarray(r["plan"]["slots"]),
                            np.asarray(r["plan"]["cum"]))
             if r["plan"]["migrations"]:
                 self._migrate(r["plan"]["migrations"])
-        for bp in self.controller.breakpoints:
-            if isinstance(bp, LocalBreakpoint):
-                self.local_bps.append(bp)
-            elif isinstance(bp, GlobalCountBreakpoint):
-                self.global_bps.append(bp)
-        self.controller.breakpoints = []
         return r["stopped"]
 
     def _migrate(self, migrations) -> None:
@@ -148,19 +163,14 @@ class TrainLoop:
 
     # ----------------------------------------------------------------- run
     def _fused_eligible(self) -> bool:
-        """Adaptive control granularity: take the fused fast path only when
-        nothing can demand a mid-step control point — no pending or replaying
-        message, no registered breakpoint, not paused/stopped.  Whenever
-        interactivity is actually in use, fall back to the granulated path so
-        Amber's per-microbatch semantics are preserved exactly."""
-        if self.lc.step_path == "granulated":
-            return False
-        if self.lc.step_path == "fused":
-            return True
-        c = self.controller
-        return (not c.paused and not c.stopped and c.mailbox.empty()
-                and not self.local_bps and not self.global_bps
-                and not c.is_replaying())
+        """Step-path choice, delegated to the engine.  Whenever interactivity
+        is actually in use (pending/replaying message, breakpoint, paused)
+        the engine returns the granulated path so Amber's per-microbatch
+        semantics are preserved exactly; otherwise it scores both step-job
+        workflows under the measured cost model and picks the cheaper —
+        the PR-1 ``auto`` heuristic, now as a Maestro decision."""
+        return self.engine.choose_step_path(
+            self.lc.step_path, self.lc.microbatches) == "fused"
 
     def _check_breakpoints(self, m_host: Dict[str, Any],
                            tokens_count: float) -> None:
@@ -248,13 +258,24 @@ class TrainLoop:
             if self._poll(step, 0):
                 break
             batch = self.stream.next()
+            n_tok = int(batch["tokens"].size)
             if self._fused_eligible():
-                step_metrics = self._step_fused(batch, n_mb)
+                step_metrics = self.engine.run_job(
+                    Job("train_step_fused", tokens=n_tok),
+                    lambda: self._step_fused(batch, n_mb))
             else:
+                t0 = time.perf_counter()
+                log_before = len(self.controller.log)
                 step_metrics, stopped = self._step_granulated(step, batch,
                                                               n_mb)
                 if stopped:
                     break
+                if len(self.controller.log) == log_before:
+                    # clean measurement only: a step that served control
+                    # messages (or sat paused) must not poison the cost model
+                    self.engine.observe(
+                        Job("train_step_granulated", tokens=n_tok),
+                        time.perf_counter() - t0)
             self.history.append({"step": step, **{
                 k: (float(v) if np.ndim(v) == 0 else v)
                 for k, v in step_metrics.items()}})
@@ -267,7 +288,8 @@ class TrainLoop:
                     self._migrate(migs)
                 self._set_plan(ps, pc)
             if self.ckpt and (step + 1) % self.lc.ckpt_every == 0:
-                self.save(step + 1)
+                self.engine.run_job(Job("checkpoint"),
+                                    lambda: self.save(step + 1))
         return self.history
 
     # -------------------------------------------------------- fault tolerance

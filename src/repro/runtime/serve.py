@@ -44,18 +44,48 @@ def sample(logits: jnp.ndarray, key, temperature: float = 0.8):
 
 
 class BatchedServer:
-    """Small host-side serving loop (examples + tests): requests are batched,
-    prefill runs token-by-token through the decode path (smoke scale), and
-    decode emits until max_tokens."""
+    """Serving front door for examples + tests — now a thin client of the
+    engine layer: ``generate`` routes through
+    :class:`repro.engine.ServeEngine` (continuous batching, chunked batched
+    prefill, control plane between ticks).  The pre-engine loop — static
+    batch, prefill one token per dispatch — survives as
+    ``generate_static``: it is the benchmark baseline and the output-
+    equivalence oracle for the engine path."""
 
-    def __init__(self, cfg: ArchConfig, params, max_len: int = 128):
+    def __init__(self, cfg: ArchConfig, params, max_len: int = 128,
+                 slots: int = 4, prefill_chunk: int = 16,
+                 decode_chunk: int = 4):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
-        self._step = jax.jit(build_serve_step(cfg))
+        self.slots = slots
+        self.prefill_chunk = prefill_chunk
+        self.decode_chunk = decode_chunk
+        self._step = None                # static-path jit, built on demand
+        self._engine = None
+
+    def engine(self, seed: int = 0):
+        from repro.engine.serve import ServeEngine
+        if self._engine is None:
+            self._engine = ServeEngine(
+                self.cfg, self.params, max_len=self.max_len,
+                slots=self.slots, prefill_chunk=self.prefill_chunk,
+                decode_chunk=self.decode_chunk, seed=seed)
+        return self._engine
 
     def generate(self, prompts: np.ndarray, max_new: int = 16,
                  temperature: float = 0.0, seed: int = 0):
+        # seed pins per-request sampling keys on every call (the cached
+        # ServeEngine's own seed only covers requests submitted without one)
+        return self.engine(seed).generate(prompts, max_new, temperature,
+                                          seed=seed)
+
+    def generate_static(self, prompts: np.ndarray, max_new: int = 16,
+                        temperature: float = 0.0, seed: int = 0):
+        """The old static loop: one decode dispatch per prompt token
+        (prefill) and per generated token, whole batch in lockstep."""
+        if self._step is None:
+            self._step = jax.jit(build_serve_step(self.cfg))
         b, plen = prompts.shape
         state = lm.init_cache(self.cfg, b, self.max_len)
         logits = None

@@ -180,10 +180,23 @@ def build_fused_step(cfg: ArchConfig, hyper: TrainHyper):
     return fused
 
 
-def build_grad_step(cfg: ArchConfig, hyper: TrainHyper):
+def build_grad_step(cfg: ArchConfig, hyper: TrainHyper, donate=None):
     """Interactive-mode pieces: one-microbatch grad + separate apply (the
-    Amber granulated iteration: the loop polls control between microbatches)."""
+    Amber granulated iteration: the loop polls control between microbatches).
+
+    ``apply`` and ``migrate`` donate the incoming state (params + opt
+    moments are overwritten in place on accelerator backends) — without it
+    the granulated path allocated fresh params/opt buffers every step while
+    the fused path reused them.  The loop's ``self.state = apply(...)`` /
+    ``self.state = migrate(...)`` call pattern never touches the old state
+    afterwards, which is what makes donation safe.  CPU ignores donation
+    (and warns per compile), so it defaults off there; tests force it on
+    via ``donate`` to audit the wiring.
+    """
     nl_moe = lm.n_moe_layers(cfg)
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    donate_state = (0,) if donate else ()
 
     @jax.jit
     def grad_mb(params, batch, plan_slots, plan_cum, offset):
@@ -192,14 +205,14 @@ def build_grad_step(cfg: ArchConfig, hyper: TrainHyper):
             loss_fn, has_aux=True)(params, batch, cfg, hyper, plan, offset)
         return grads, metrics
 
-    @partial(jax.jit, static_argnames=("n_mb",))
+    @partial(jax.jit, static_argnames=("n_mb",), donate_argnums=donate_state)
     def apply(state, grads, n_mb: int, lr_scale):
         grads = jax.tree.map(lambda g: g / n_mb, grads)
         params, opt, m = adamw.apply(state["params"], grads, state["opt"],
                                      hyper.opt, lr_scale)
         return {"params": params, "opt": opt, "step": state["step"] + 1}, m
 
-    @jax.jit
+    @partial(jax.jit, donate_argnums=donate_state)
     def migrate(state, src_dst):
         """Expert state migration: copy slot src->dst on every expert-stacked
         leaf of params AND optimizer moments (layer, src, dst) int32 [M,3]."""

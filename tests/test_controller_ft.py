@@ -119,6 +119,91 @@ def test_sum_predicate_single_worker_endgame_reduces_overshoot():
     assert with_endgame.overshoot <= without.overshoot + 1e-9
 
 
+def test_durable_log_plan_roundtrip(tmp_path):
+    """A 'plan' record (numpy arrays + Migration dataclasses) must survive
+    attach_durable_log -> crash -> read_durable_log -> replay.  The old code
+    swallowed the json TypeError and silently dropped the record, so a
+    recovered worker would route with a stale plan."""
+    from repro.core.controller import ReplayingController
+    from repro.core.reshape_moe import Migration
+
+    path = str(tmp_path / "control.log")
+    ctl = Controller()
+    ctl.attach_durable_log(path)
+    slots = np.arange(8, dtype=np.int32).reshape(1, 2, 4)
+    cum = np.linspace(0.25, 1.0, 8, dtype=np.float32).reshape(1, 2, 4)
+    migs = (Migration(0, 1, 3), Migration(0, 2, 6))
+    ctl.send(M.set_plan(slots, cum, migs))
+    ctl.send(M.update(lr_scale=0.5))
+    ctl.poll(step=2, microbatch=1, inspect_fn=None)
+    del ctl                                       # "crash"
+
+    records = Controller.read_durable_log(path)
+    kinds = [r.kind for r in records]
+    assert kinds == ["plan", "update"], kinds      # plan NOT dropped
+    pl = records[0].payload
+    np.testing.assert_array_equal(np.asarray(pl["slots"]), slots)
+    assert np.asarray(pl["slots"]).dtype == np.int32
+    np.testing.assert_allclose(np.asarray(pl["cum"]), cum, rtol=1e-6)
+    assert [(m.layer, m.src_slot, m.dst_slot) for m in pl["migrations"]] == \
+        [(0, 1, 3), (0, 2, 6)]
+    assert records[0].step == 2 and records[0].microbatch == 1
+
+    # replay the restored records: the plan must land exactly as sent
+    rc = ReplayingController(records)
+    r = rc.poll(step=2, microbatch=1)
+    assert r["plan"] is not None
+    np.testing.assert_array_equal(np.asarray(r["plan"]["slots"]), slots)
+    assert r["updates"] == {"lr_scale": 0.5}
+    assert [(m.layer, m.src_slot, m.dst_slot)
+            for m in r["plan"]["migrations"]] == [(0, 1, 3), (0, 2, 6)]
+
+
+def test_durable_log_unserializable_payload_keeps_worker_alive(tmp_path):
+    """A payload _json_safe cannot model must neither kill poll() nor
+    vanish: it is logged as a tagged repr with a warning."""
+    import warnings
+    path = str(tmp_path / "control.log")
+    ctl = Controller()
+    ctl.attach_durable_log(path)
+    ctl.send(M.update(tags={"a", "b"}))           # a set is not JSON
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ctl.poll(step=0, microbatch=0)            # must not raise
+    assert any("durable log" in str(x.message) for x in w)
+    recs = Controller.read_durable_log(path)
+    assert recs and recs[0].kind == "update"
+    assert "__unserializable__" in recs[0].payload
+    assert "tags" in recs[0].payload["__unserializable__"]
+
+
+@pytest.mark.slow
+def test_durable_log_plan_recovery_applies_to_loop(tmp_path):
+    """End-to-end: a plan message logged durably before a crash reshapes the
+    recovered loop's routing plan at its recorded step."""
+    d = str(tmp_path / "ckpt")
+    loop = mk_loop(d, ckpt_every=2)
+    nl = len(loop.plan_slots)
+    loop.run(2)                                   # checkpoint at step 2
+    new_slots = np.asarray(loop.plan_slots).copy()
+    new_slots[0, 0, :] = (new_slots[0, 0, :] + 1) % new_slots.shape[1]
+    new_cum = np.asarray(loop.plan_cum).copy()
+    assert not np.array_equal(new_slots, np.asarray(loop.plan_slots))
+    loop.controller.send(M.set_plan(new_slots, new_cum, ()))
+    loop.run(1)                            # plan applied + logged at (2, 0)
+    del loop                                      # crash after step 3
+
+    cfg = get_arch("olmoe-1b-7b-smoke")
+    stream = TokenStream(vocab=cfg.vocab, seq_len=16, global_batch=4, seed=3)
+    rec = TrainLoop.recover(cfg, stream, TrainHyper(),
+                            LoopConfig(microbatches=2, ckpt_every=2,
+                                       ckpt_dir=d))
+    assert int(rec.state["step"]) == 2
+    rec.run(2)                                    # replays the plan at step 3
+    np.testing.assert_array_equal(np.asarray(rec.plan_slots), new_slots)
+    assert nl == len(rec.plan_slots)
+
+
 @pytest.mark.slow
 def test_fault_tolerance_bit_exact_recovery(tmp_path):
     """Run A: 8 steps with an lr update at step 4 (logged), checkpoint@4.

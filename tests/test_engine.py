@@ -1,0 +1,294 @@
+"""The unified engine layer: Maestro decisions over measured job costs,
+continuous-batching ServeEngine (join/evict, chunked prefill, min-FRT tick
+composition), the TrainLoop-as-engine-client refactor, and the granulated
+apply/migrate donation audit."""
+import threading
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import messages as M
+from repro.core.breakpoints import GlobalCountBreakpoint
+from repro.core.estimator import CostBook
+from repro.core.scheduler import CostModel, completion_time, score_choices
+from repro.data.synthetic import TokenStream
+from repro.engine import (Engine, Job, ServeEngine, serve_tick_workflow,
+                          train_step_workflow)
+from repro.models import lm
+from repro.runtime.loop import LoopConfig, TrainLoop
+from repro.runtime.train import TrainHyper, build_grad_step, make_state
+
+
+def _params(arch="gemma3-1b-smoke"):
+    cfg = get_arch(arch)
+    return cfg, lm.init(cfg, jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------ cost book
+
+def test_costbook_warmup_skip_and_ema():
+    eng = Engine()
+    eng.observe(Job("k", tokens=10), 99.0)      # warm-up (compile) discarded
+    assert eng.costs.estimate("k") is None
+    eng.observe(Job("k", tokens=10), 1.0)
+    assert abs(eng.costs.estimate("k") - 1.0) < 1e-9
+    assert abs(eng.costs.estimate("k_per_tok") - 0.1) < 1e-9
+    assert eng.jobs_run["k"] == 2
+    assert "k" in eng.costs.snapshot()
+
+
+def test_costbook_default_until_measured():
+    cb = CostBook()
+    assert cb.estimate("missing") is None
+    assert cb.estimate("missing", 0.5) == 0.5
+    cb.observe("missing", 2.0)
+    assert cb.estimate("missing", 0.5) == 2.0
+
+
+# ----------------------------------------------------- job/region workflows
+
+def test_train_step_workflow_frt_vs_completion():
+    """Granulated: first response after ONE microbatch but a longer drain;
+    fused: one region — FRT equals completion.  This asymmetry IS the
+    step-path decision."""
+    from repro.core.scheduler import first_response_time
+    cm = CostModel()
+    t_mb, n_mb = 0.1, 4
+    wf_g = train_step_workflow("granulated", n_mb, t_mb, t_apply=0.02)
+    wf_f = train_step_workflow("fused", n_mb, 0.08, t_apply=0.02)
+    frt_g = first_response_time(wf_g, frozenset(), cm)
+    frt_f = first_response_time(wf_f, frozenset(), cm)
+    assert abs(frt_g - t_mb) < 1e-9              # one microbatch
+    assert abs(frt_f - (4 * 0.08 + 0.02)) < 1e-9  # the whole fused step
+    assert frt_g < frt_f
+    assert completion_time(wf_f, cm) < completion_time(wf_g, cm)
+
+
+def test_serve_tick_workflow_decode_preempts_prefill():
+    cm = CostModel()
+    from repro.core.scheduler import first_response_time
+    wf_d = serve_tick_workflow(2, 4, 0, t_token=0.01)
+    wf_p = serve_tick_workflow(2, 16, 64, t_token=0.01)
+    frt_d = first_response_time(wf_d, frozenset(), cm)
+    frt_p = first_response_time(wf_p, frozenset(), cm)
+    assert frt_d < frt_p                         # short decode wins on FRT
+    sc = score_choices(wf_p, cm, objective="frt")
+    assert sc[0][0] == pytest.approx(frt_p)
+
+
+# ------------------------------------------------------------ engine choices
+
+def test_choose_step_path_interactive_forces_granulated():
+    eng = Engine()
+    assert eng.choose_step_path("auto", 2) == "fused"     # idle + priors
+    eng.controller.mailbox.put(M.inspect())
+    assert eng.choose_step_path("auto", 2) == "granulated"
+    eng.controller.mailbox.get_nowait()
+    eng.controller.paused = True
+    assert eng.choose_step_path("auto", 2) == "granulated"
+    eng.controller.paused = False
+    assert eng.choose_step_path("fused", 2) == "fused"    # forced wins
+    assert eng.choose_step_path("granulated", 2) == "granulated"
+
+
+def test_choose_step_path_follows_measured_costs():
+    eng = Engine()
+    for t in (0.2, 0.2):                  # first observation is warm-up
+        eng.observe(Job("train_step_fused"), t)
+        eng.observe(Job("train_step_fused"), t)
+    for t in (0.05, 0.05):
+        eng.observe(Job("train_step_granulated"), t)
+        eng.observe(Job("train_step_granulated"), t)
+    # measured costs say granulated is cheaper -> the cost model, not the
+    # old hard-coded heuristic, decides
+    assert eng.choose_step_path("auto", 2) == "granulated"
+    assert eng.decisions[-1]["scores"]["granulated"] < \
+        eng.decisions[-1]["scores"]["fused"]
+
+
+def test_choose_serve_tick_aging_bounds_prefill_starvation():
+    eng = Engine(max_prefill_defer=3)
+    picks = [eng.choose_serve_tick(decode_slots=2, prefill_slots=1,
+                                   prefill_tokens=64, decode_chunk=4,
+                                   prefill_chunk=16) for _ in range(8)]
+    assert picks[:3] == ["decode"] * 3           # min-FRT prefers decode
+    assert picks[3] == "prefill"                 # aging bound fires
+    assert eng.choose_serve_tick(0, 1, 64, 4, 16) == "prefill"
+    assert eng.choose_serve_tick(2, 0, 0, 4, 16) == "decode"
+
+
+# ------------------------------------------------------------- serve engine
+
+@pytest.mark.slow
+def test_serve_engine_matches_static_batched_server():
+    """Chunked batched prefill + in-jit decode must reproduce the old
+    one-token-per-dispatch server exactly (greedy)."""
+    from repro.runtime.serve import BatchedServer
+    cfg, params = _params()
+    srv = BatchedServer(cfg, params, max_len=64)
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(1, cfg.vocab, (4, 11)).astype(np.int32)
+    ref = srv.generate_static(prompts, max_new=10, temperature=0.0)
+    got = srv.generate(prompts, max_new=10, temperature=0.0)
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.slow
+def test_serve_engine_continuous_join_evict_mixed_lengths():
+    """More requests than slots, mixed prompt lengths: every request must
+    finish with exactly max_new tokens, each matching a fresh static run."""
+    from repro.runtime.serve import BatchedServer
+    cfg, params = _params()
+    eng = ServeEngine(cfg, params, max_len=64, slots=2, prefill_chunk=8,
+                      decode_chunk=4)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, cfg.vocab, (l,)).astype(np.int32)
+               for l in (3, 9, 14, 6, 9)]
+    reqs = [eng.submit(p, max_new=6) for p in prompts]
+    eng.run_until_done()
+    assert all(r.done.is_set() for r in reqs)
+    assert eng.engine.jobs_run.get("serve_prefill", 0) >= 1
+    srv = BatchedServer(cfg, params, max_len=64)
+    for p, r in zip(prompts, reqs):
+        ref = srv.generate_static(p[None, :], max_new=6, temperature=0.0)
+        np.testing.assert_array_equal(r.output(), ref[0],
+                                      err_msg=f"plen={len(p)}")
+
+
+def test_serve_engine_inspect_and_update_between_ticks():
+    cfg, params = _params()
+    eng = ServeEngine(cfg, params, max_len=48, slots=2, prefill_chunk=4,
+                      decode_chunk=2)
+    eng.submit(np.arange(1, 5, dtype=np.int32), max_new=4)
+    msg = eng.engine.controller.send(M.inspect())
+    eng.tick()
+    info = msg.wait(30)
+    assert info["queue_depth"] == 1 or info["slots"]
+    assert "engine" in info and "costs" in info["engine"]
+    eng.engine.controller.send(M.update(max_prefill_defer=9))
+    eng.tick()
+    assert eng.engine.max_prefill_defer == 9
+    eng.run_until_done()
+
+
+def test_serve_engine_breakpoint_pauses_stream():
+    cfg, params = _params()
+    eng = ServeEngine(cfg, params, max_len=48, slots=2, prefill_chunk=4,
+                      decode_chunk=2)
+    eng.engine.controller.send(M.set_breakpoint(
+        GlobalCountBreakpoint("tok-budget", "emitted", target=4)))
+    eng.submit(np.arange(1, 5, dtype=np.int32), max_new=12)
+
+    def resumer():
+        while not eng.engine.controller.paused:
+            time.sleep(0.02)
+        eng.engine.controller.send(M.resume())
+
+    th = threading.Thread(target=resumer)
+    th.start()
+    eng.run_until_done()
+    th.join()
+    assert "tok-budget" in eng.hit_breakpoints
+
+
+def test_serve_engine_chunk_hot_update_never_strands_requests():
+    """Raising the chunk sizes mid-stream beyond the headroom reserved at
+    submit time must shrink the tick instead of stranding near-full slots."""
+    cfg, params = _params()
+    eng = ServeEngine(cfg, params, max_len=32, slots=2, prefill_chunk=8,
+                      decode_chunk=4)
+    reqs = [eng.submit(np.arange(1, 9, dtype=np.int32), max_new=12)
+            for _ in range(2)]
+    eng.tick()                                   # some progress at chunk 8
+    eng.engine.controller.send(M.update(decode_chunk=64, prefill_chunk=64))
+    eng.run_until_done()                         # must not raise / hang
+    assert eng.decode_chunk == 64
+    for r in reqs:
+        assert r.done.is_set() and len(r.output()) == 12
+
+
+def test_serve_generate_seed_reproducible_with_temperature():
+    cfg, params = _params()
+    eng = ServeEngine(cfg, params, max_len=48, slots=2, prefill_chunk=8,
+                      decode_chunk=4)
+    p = np.arange(1, 7, dtype=np.int32)[None, :]
+    a = eng.generate(p, max_new=6, temperature=0.8, seed=7)
+    b = eng.generate(p, max_new=6, temperature=0.8, seed=7)
+    c = eng.generate(p, max_new=6, temperature=0.8, seed=8)
+    np.testing.assert_array_equal(a, b)          # same seed -> same sample
+    assert not np.array_equal(a, c)              # different seed -> differs
+
+
+# ------------------------------------------------- loop as an engine client
+
+def test_trainloop_is_engine_client():
+    cfg = get_arch("gemma3-1b-smoke")
+    stream = TokenStream(vocab=cfg.vocab, seq_len=8, global_batch=2)
+    loop = TrainLoop(cfg, stream, TrainHyper(), LoopConfig(microbatches=2))
+    assert loop.controller is loop.engine.controller
+    loop.run(3)
+    assert loop.engine.jobs_run.get("train_step_fused", 0) >= 1
+    # warm-up skipped, later steps measured
+    assert "train_step_fused" in loop.engine.costs.snapshot()
+    info = loop._inspect("engine")
+    assert info["engine"]["jobs_run"]["train_step_fused"] >= 1
+
+
+def test_trainloop_shared_engine_across_train_and_serve():
+    """One engine can own the control plane for both workload types — the
+    unification the layer exists for."""
+    cfg = get_arch("gemma3-1b-smoke")
+    shared = Engine()
+    stream = TokenStream(vocab=cfg.vocab, seq_len=8, global_batch=2)
+    loop = TrainLoop(cfg, stream, TrainHyper(), LoopConfig(microbatches=1),
+                     engine=shared)
+    loop.run(2)
+    serve = ServeEngine(cfg, loop.state["params"], max_len=48, slots=2,
+                        prefill_chunk=4, decode_chunk=2, engine=shared)
+    serve.submit(np.arange(1, 6, dtype=np.int32), max_new=3)
+    serve.run_until_done()
+    kinds = set(shared.jobs_run)
+    assert {"train_step_fused", "serve_prefill"} <= kinds
+
+
+# ------------------------------------------------------------ donation audit
+
+def test_granulated_apply_migrate_donate_state():
+    """The granulated-path apply/migrate jits donate the state: params AND
+    optimizer-moment buffers are reused in place, so after the call the old
+    state's leaves must be dead (jax 0.4.37 honors donation on CPU too —
+    the live-buffer assertion runs everywhere)."""
+    cfg = get_arch("olmoe-1b-7b-smoke")
+    hyper = TrainHyper()
+    _, apply, migrate = build_grad_step(cfg, hyper, donate=True)
+    state = make_state(cfg, jax.random.PRNGKey(0))
+    grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                         state["params"])
+    state2, _ = apply(state, grads, 2, jnp.asarray(1.0))
+    jax.block_until_ready(state2)
+    assert all(x.is_deleted() for x in
+               jax.tree.leaves(state["params"]) +
+               jax.tree.leaves(state["opt"].m) +
+               jax.tree.leaves(state["opt"].v)), \
+        "apply must donate the incoming params/opt buffers"
+    arr = jnp.asarray([[0, 0, 1]], jnp.int32)
+    state3 = migrate(state2, arr)
+    jax.block_until_ready(state3)
+    assert all(x.is_deleted() for x in jax.tree.leaves(state2["params"])), \
+        "migrate must donate the incoming state buffers"
+    assert int(state3["step"]) == 1
+
+
+def test_grad_step_default_donation_matches_backend():
+    cfg = get_arch("gemma3-1b-smoke")
+    # default wiring: donation on iff not CPU; just ensure both build & run
+    _, apply, _ = build_grad_step(cfg, TrainHyper())
+    state = make_state(cfg, jax.random.PRNGKey(1))
+    grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                         state["params"])
+    state2, _ = apply(state, grads, 1, jnp.asarray(1.0))
+    assert int(state2["step"]) == 1

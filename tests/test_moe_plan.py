@@ -130,7 +130,9 @@ def test_apply_migrations_np():
 def test_runtime_migrate_matches_numpy():
     from repro.runtime.train import TrainHyper, build_grad_step, make_state
     state = make_state(CFG, jax.random.PRNGKey(0))
-    _, _, migrate = build_grad_step(CFG, TrainHyper())
+    # donate=False: this test reads the pre-migrate state afterwards, which
+    # a donated (deleted) buffer would forbid on accelerator backends
+    _, _, migrate = build_grad_step(CFG, TrainHyper(), donate=False)
     arr = jnp.asarray([[0, 1, 9], [1, 2, 8]], jnp.int32)
     new_state = migrate(state, arr)
     for k in ("w_gate", "w_up", "w_down"):
