@@ -34,6 +34,13 @@ class MoECfg:
     # route via the fused Pallas gating kernel (softmax + top-k + load
     # histogram in one pass); interpret-mode fallback off-TPU.
     fused_gating: bool = False
+    # dispatch/combine via the fused Pallas MoE dispatch kernel family
+    # (in-segment rank + capacity mask + bucketed scatter in one kernel,
+    # weighted-gather combine with a custom VJP); off-TPU the same fused
+    # algorithm runs as vectorized jnp (kernels/moe_dispatch/ref.py).
+    # Drop decisions and Reshape load metrics are bit-identical to the
+    # XLA argsort/searchsorted/scatter path.
+    fused_dispatch: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

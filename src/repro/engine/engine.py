@@ -48,6 +48,7 @@ class Engine:
         self.jobs_run: Dict[str, int] = {}
         self.max_prefill_defer = max_prefill_defer
         self._prefill_defer = 0
+        self._dispatch_rounds: Dict[int, int] = {}
         self._cm = CostModel(parallelism=1.0)
 
     # ---------------------------------------------------------- control plane
@@ -72,13 +73,18 @@ class Engine:
                 or c.is_replaying())
 
     # ----------------------------------------------------------------- jobs
-    def run_job(self, job: J.Job, fn: Callable[[], Any]) -> Any:
+    def run_job(self, job: J.Job, fn: Callable[[], Any],
+                extra: tuple = ()) -> Any:
         """Execute a job thunk, feed its measured runtime back into the cost
-        book (per token when the job reports a token count, else per job)."""
+        book (per token when the job reports a token count, else per job).
+        ``extra`` jobs record the same duration under additional kinds —
+        e.g. a train step also measured as a dispatch-impl sample."""
         t0 = time.perf_counter()
         out = fn()
         dt = time.perf_counter() - t0
         self.observe(job, dt)
+        for j in extra:
+            self.observe(j, dt)
         return out
 
     def observe(self, job: J.Job, seconds: float) -> None:
@@ -130,6 +136,44 @@ class Engine:
             scores[path] = completion_time(wf, self._cm)
         best = min(scores, key=scores.get)
         return self._decide("step_path", best, scores=scores)
+
+    def choose_dispatch_impl(self, tokens: int, forced: str = "auto") -> str:
+        """Fused Pallas vs XLA MoE dispatch kernel, per shape (PR-2's
+        adaptive path choice extended from loop granularity down to kernel
+        choice).  Both impls run as alternative step workflows: the client
+        tags each step it executes with a ``dispatch_kind`` job, so the
+        CostBook accumulates a measured EMA per (impl, token-count) pair.
+        Bootstrap explores fused first, then the XLA arm, then scores the
+        two ``moe_dispatch_workflow`` candidates under ``completion_time``
+        — the same objective the step-path decision uses.  (Each arm needs
+        two runs before it is measured: the first carries the fresh jit
+        specialization and is skipped by ``observe``.)"""
+        if forced in ("fused", "xla"):
+            return forced
+        t_f = self.costs.estimate(J.dispatch_kind("fused", tokens))
+        if t_f is None:
+            return self._decide("dispatch_impl", "fused", why="bootstrap",
+                                tokens=tokens)
+        t_x = self.costs.estimate(J.dispatch_kind("xla", tokens))
+        if t_x is None:
+            return self._decide("dispatch_impl", "xla", why="explore",
+                                tokens=tokens)
+        scores = {}
+        for impl, t_step in (("fused", t_f), ("xla", t_x)):
+            wf = J.moe_dispatch_workflow(impl, tokens, t_step)
+            scores[impl] = completion_time(wf, self._cm)
+        best = min(scores, key=scores.get)
+        # periodic re-explore: only the chosen impl runs (and refreshes its
+        # EMA), so without this a stale or noise-poisoned measurement of
+        # the loser would wedge the choice forever
+        self._dispatch_rounds[tokens] = \
+            self._dispatch_rounds.get(tokens, 0) + 1
+        if self._dispatch_rounds[tokens] % 16 == 0:
+            loser = "xla" if best == "fused" else "fused"
+            return self._decide("dispatch_impl", loser, why="re-explore",
+                                tokens=tokens, scores=scores)
+        return self._decide("dispatch_impl", best, tokens=tokens,
+                            scores=scores)
 
     def choose_serve_tick(self, decode_slots: int, prefill_slots: int,
                           prefill_tokens: int, decode_chunk: int,

@@ -76,6 +76,47 @@ def train_step_workflow(path: str, n_mb: int, t_mb: float,
     return wf
 
 
+# ------------------------------------------------- MoE dispatch kernel choice
+
+def dispatch_kind(impl: str, tokens: int) -> str:
+    """CostBook key for a step executed with one MoE dispatch impl.  Keyed
+    per token count so the choice is made *per shape*: the fused kernel's
+    advantage depends on T*k (the rank/scatter pipeline is linear in it,
+    the argsort is not), so one global EMA would wash shapes together."""
+    return f"moe_dispatch_{impl}:t{tokens}"
+
+
+def moe_dispatch_workflow(impl: str, tokens: int, t_total: float) -> Workflow:
+    """The MoE dispatch/combine primitive as a region workflow.
+
+    ``xla`` is the argsort pipeline: rank (sort+searchsorted), bucketed
+    scatter, the per-slot expert matmuls, and the gather/combine each run
+    as their own launch, so each is its own blocking region.  ``fused``
+    collapses rank+mask+scatter into one kernel region and the weighted
+    gather into another.  Region costs split the *measured* total for the
+    impl (the CostBook EMA), so scoring the two candidates under
+    ``completion_time`` — exactly how ``choose_step_path`` scores step
+    workflows — picks the cheaper kernel for this shape on this machine.
+    """
+    if impl == "fused":
+        stages = (("dispatch_kernel", 0.3), ("experts", 0.4),
+                  ("combine_kernel", 0.3))
+    else:
+        stages = (("rank_sort", 0.2), ("scatter", 0.2), ("experts", 0.4),
+                  ("gather_combine", 0.2))
+    wf = Workflow()
+    wf.add_op(Op("tokens", "scan", cost_per_tuple=0.0,
+                 source_cardinality=1.0))
+    prev = "tokens"
+    for name, share in stages:
+        wf.add_op(Op(name, "ml", cost_per_tuple=share * t_total))
+        wf.add_edge(prev, name, blocking=(prev != "tokens"))
+        prev = name
+    wf.add_op(Op("out", "sink", cost_per_tuple=0.0))
+    wf.add_edge(prev, "out")
+    return wf
+
+
 # ------------------------------------------------------------------- serving
 
 def serve_tick_workflow(decode_slots: int, decode_chunk: int,

@@ -120,7 +120,7 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, max_len: int = 128,
                  slots: int = 4, prefill_chunk: int = 16,
                  decode_chunk: int = 4, engine: Optional[Engine] = None,
-                 seed: int = 0):
+                 seed: int = 0, compact_decode: bool = False):
         self.cfg = cfg
         self.params = params
         self.engine = engine or Engine()
@@ -128,6 +128,14 @@ class ServeEngine:
         self.slots = slots
         self.prefill_chunk = prefill_chunk
         self.decode_chunk = decode_chunk
+        # lane-waste mitigation: when at least half the pool sits out a
+        # decode tick (idle slots + prefill slots deferred by the min-FRT
+        # rule), gather the participants into a compact batch before the
+        # tick vmap so sat-out lanes stop burning decode FLOPs.  Costs one
+        # gather + scatter-back of the participating cache rows per tick,
+        # so it is gated on the pool being at least half idle.
+        self.compact_decode = compact_decode
+        self.compact_ticks = 0
         one = lm.init_cache(cfg, 1, max_len)
         self.pool = jax.tree.map(
             lambda x: jnp.zeros((slots,) + x.shape, x.dtype), one["caches"])
@@ -137,7 +145,7 @@ class ServeEngine:
         self._base_key = jax.random.PRNGKey(seed)
         self.keys = jax.random.split(self._base_key, slots)
         self._tick = build_slot_tick(cfg)
-        self._compiled: set = set()            # tick lengths already jitted
+        self._compiled: set = set()    # (tick_len, rows) pairs already jitted
         self.queue: Deque[Request] = deque()
         self.active: List[Optional[Request]] = [None] * slots
         self.tick_no = 0
@@ -293,18 +301,56 @@ class ServeEngine:
             part.append(r)
         if not part:
             return True
-        cold = L not in self._compiled      # fresh jit specialization: keep
-        self._compiled.add(L)               # its compile time out of the EMA
+        # lane-waste mitigation: with >= half the pool sitting out this
+        # decode tick, gather participants into a compact batch (padded to
+        # a power of two with idle rows so the jit specializes on few batch
+        # sizes).  Pad rows run inactive — their state round-trips
+        # unchanged — and the scatter-back touches only gathered rows, so
+        # sat-out slots keep their pending reset flags and cache state.
+        part_slots = [r.slot for r in part]
+        compact = (self.compact_decode and mode == "decode"
+                   and len(part) <= self.slots // 2)
+        if compact:
+            nc = 1
+            while nc < len(part):
+                nc *= 2
+            pads = [s for s in range(self.slots) if s not in set(part_slots)]
+            idx = np.asarray(part_slots + pads[:nc - len(part)], np.int32)
+        else:
+            idx = np.arange(self.slots, dtype=np.int32)
+        rows = len(idx)
+        cold = (L, rows) not in self._compiled  # fresh jit specialization:
+        self._compiled.add((L, rows))           # keep compiles out of the EMA
         job = Job("serve_" + ("prefill" if mode == "prefill" else "decode"),
                   tokens=L * len(part), meta={"cold": cold})
-        self.pool, self.pos, self.keys, emitted = self.engine.run_job(
-            job, lambda: jax.block_until_ready(self._tick(
-                self.params, self.pool, self.pos, jnp.asarray(toks),
-                jnp.asarray(n_given), jnp.asarray(active),
-                jnp.asarray(self._reset), self.keys, jnp.asarray(temps))))
-        self._reset[:] = False                # zeroing landed inside the jit
+        if compact:
+            jidx = jnp.asarray(idx)
+            pool_c = jax.tree.map(lambda c: c[jidx], self.pool)
+            pool_n, pos_n, keys_n, emitted = self.engine.run_job(
+                job, lambda: jax.block_until_ready(self._tick(
+                    self.params, pool_c, self.pos[jidx],
+                    jnp.asarray(toks[idx]), jnp.asarray(n_given[idx]),
+                    jnp.asarray(active[idx]), jnp.asarray(self._reset[idx]),
+                    self.keys[jidx], jnp.asarray(temps[idx]))))
+            self.pool = jax.tree.map(lambda p, n: p.at[jidx].set(n),
+                                     self.pool, pool_n)
+            self.pos = self.pos.at[jidx].set(pos_n)
+            self.keys = self.keys.at[jidx].set(keys_n)
+            self._reset[idx] = False
+            em_rows = np.asarray(emitted)
+            em = np.zeros((self.slots, L), em_rows.dtype)
+            em[idx] = em_rows
+            self.compact_ticks += 1
+        else:
+            self.pool, self.pos, self.keys, emitted = self.engine.run_job(
+                job, lambda: jax.block_until_ready(self._tick(
+                    self.params, self.pool, self.pos, jnp.asarray(toks),
+                    jnp.asarray(n_given), jnp.asarray(active),
+                    jnp.asarray(self._reset), self.keys,
+                    jnp.asarray(temps))))
+            self._reset[:] = False            # zeroing landed inside the jit
+            em = np.asarray(emitted)
         self.pos_host[active] += L
-        em = np.asarray(emitted)
         n_new = 0
         for r in part:
             s, g = r.slot, int(n_given[r.slot])

@@ -1,0 +1,148 @@
+"""Pallas TPU kernels: fused MoE dispatch (rank + capacity + bucketed
+scatter) and combine (weighted gather).
+
+The XLA baseline (``models.moe.dispatch_combine``) runs the hot rank/bucket
+pipeline as four separate launches — ``argsort`` -> ``searchsorted`` ->
+masked scatter-add into the ``[slots, cap, D]`` buffer -> gather/combine —
+each round-tripping the ``[T*k]`` assignment arrays through HBM.  Here the
+whole dispatch side is ONE kernel walking token blocks sequentially:
+
+* **rank**: a VMEM-resident running histogram of routed tokens per slot is
+  carried across grid steps (same trick as ``moe_gating``'s count output);
+  within a block the rank is the histogram base plus an exclusive cumsum of
+  the slot one-hot.  For a *stable* sort this equals the baseline's
+  sorted-position-within-segment, so drop decisions are bit-identical.
+* **capacity mask**: ``keep = valid & (rank < cap)`` on the fly.
+* **bucketed scatter**: TPU has no fast vector scatter, so the scatter is a
+  one-hot matmul — the block's ``[bt, S*C]`` destination multi-hot hits the
+  MXU against the ``[bt, D]`` activations and accumulates into the VMEM
+  buffer block.  Each kept assignment owns a unique ``(slot, rank)`` bucket,
+  so the "sum" touches exactly one activation row per bucket (bit-exact).
+* **load metrics**: routed/kept per-slot counts (the Reshape phi metric)
+  fall out of the same one-hot for free.
+
+The combine kernel is the transpose: a weighted destination multi-hot matmul
+gathering expert outputs back to token rows.  Both kernels take a
+per-assignment weight operand, which makes them each other's VJP (see
+``ops.py``): d(dispatch)/dx is a combine, d(combine)/dbuf is a dispatch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dispatch_kernel(v_ref, w_ref, slot_ref, valid_ref,
+                     buf_ref, rank_ref, keep_ref, routed_ref, kept_ref,
+                     *, k: int, bt: int, s: int, cap: int):
+    ti = pl.program_id(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        buf_ref[...] = jnp.zeros_like(buf_ref)
+        routed_ref[...] = jnp.zeros_like(routed_ref)
+        kept_ref[...] = jnp.zeros_like(kept_ref)
+
+    n = bt * k
+    slot = slot_ref[...].reshape(n)
+    valid = valid_ref[...].reshape(n) != 0
+    s_eff = jnp.where(valid, slot, s)              # invalid -> virtual seg
+    iota_s = jax.lax.broadcasted_iota(jnp.int32, (n, s + 1), 1)
+    oh = (s_eff[:, None] == iota_s).astype(jnp.int32)          # [N, S+1]
+    base = jnp.concatenate([routed_ref[...], jnp.zeros((1,), jnp.int32)])
+    excl = jnp.cumsum(oh, axis=0) - oh             # exclusive, within block
+    rank = ((base[None, :] + excl) * oh).sum(1)    # [N]
+    keep = valid & (rank < cap)
+    rank = jnp.where(valid, rank, 0)   # invalid ranks are meaningless (the
+    #                                    virtual segment's base isn't carried)
+    routed_ref[...] += oh[:, :s].sum(0)
+    kept_ref[...] += (oh[:, :s] * keep[:, None].astype(jnp.int32)).sum(0)
+    rank_ref[...] = rank.reshape(bt, k)
+    keep_ref[...] = keep.astype(jnp.int32).reshape(bt, k)
+
+    # destination multi-hot [bt, S*C] -> MXU scatter into the VMEM buffer
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (n, cap), 1)
+    ohc = ((rank[:, None] == iota_c) & keep[:, None]).astype(jnp.float32)
+    wm = w_ref[...].reshape(n).astype(jnp.float32)
+    dm = (oh[:, :s].astype(jnp.float32)[:, :, None] * ohc[:, None, :])
+    dm = (dm * wm[:, None, None]).reshape(bt, k, s * cap).sum(1)
+    upd = jax.lax.dot_general(
+        dm, v_ref[...].astype(jnp.float32),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    buf_ref[...] += upd.reshape(s, cap, v_ref.shape[-1]).astype(buf_ref.dtype)
+
+
+def _combine_kernel(buf_ref, w_ref, slot_ref, rank_ref, keep_ref, y_ref,
+                    *, k: int, bt: int, s: int, cap: int):
+    n = bt * k
+    slot = slot_ref[...].reshape(n)
+    rank = rank_ref[...].reshape(n)
+    keep = keep_ref[...].reshape(n) != 0
+    iota_s = jax.lax.broadcasted_iota(jnp.int32, (n, s), 1)
+    oh = ((slot[:, None] == iota_s) & keep[:, None]).astype(jnp.float32)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (n, cap), 1)
+    ohc = ((rank[:, None] == iota_c) & keep[:, None]).astype(jnp.float32)
+    wm = w_ref[...].reshape(n).astype(jnp.float32)
+    dm = (oh[:, :, None] * ohc[:, None, :]) * wm[:, None, None]
+    dm = dm.reshape(bt, k, s * cap).sum(1)                      # [bt, S*C]
+    y = jax.lax.dot_general(
+        dm, buf_ref[...].reshape(s * cap, buf_ref.shape[-1]).astype(
+            jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def dispatch_pallas(v, w, slot, valid, n_slots: int, cap: int,
+                    bt: int = 256, interpret: bool = True):
+    """v [T,D]; w/slot/valid [T,k] -> (buf [S,C,D], rank, keep [T,k] i32,
+    routed [S] i32, kept [S] i32).  Grid walks token blocks sequentially;
+    the routed histogram doubles as the cross-block rank base."""
+    t, d = v.shape
+    k = slot.shape[1]
+    bt = min(bt, t)
+    assert t % bt == 0, (t, bt)
+    kern = functools.partial(_dispatch_kernel, k=k, bt=bt, s=n_slots, cap=cap)
+    return pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((n_slots, cap, d), v.dtype),
+                   jax.ShapeDtypeStruct((t, k), jnp.int32),
+                   jax.ShapeDtypeStruct((t, k), jnp.int32),
+                   jax.ShapeDtypeStruct((n_slots,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_slots,), jnp.int32)),
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt, d), lambda i: (i, 0)),
+                  pl.BlockSpec((bt, k), lambda i: (i, 0)),
+                  pl.BlockSpec((bt, k), lambda i: (i, 0)),
+                  pl.BlockSpec((bt, k), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((n_slots, cap, d), lambda i: (0, 0, 0)),
+                   pl.BlockSpec((bt, k), lambda i: (i, 0)),
+                   pl.BlockSpec((bt, k), lambda i: (i, 0)),
+                   pl.BlockSpec((n_slots,), lambda i: (0,)),
+                   pl.BlockSpec((n_slots,), lambda i: (0,))),
+        interpret=interpret,
+    )(v, w, slot, valid)
+
+
+def combine_pallas(buf, w, slot, rank, keep, bt: int = 256,
+                   interpret: bool = True):
+    """buf [S,C,D]; w [T,k] f32; slot/rank/keep [T,k] i32 -> y [T,D]."""
+    s, cap, d = buf.shape
+    t, k = slot.shape
+    bt = min(bt, t)
+    assert t % bt == 0, (t, bt)
+    kern = functools.partial(_combine_kernel, k=k, bt=bt, s=s, cap=cap)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((t, d), buf.dtype),
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((s, cap, d), lambda i: (0, 0, 0)),
+                  pl.BlockSpec((bt, k), lambda i: (i, 0)),
+                  pl.BlockSpec((bt, k), lambda i: (i, 0)),
+                  pl.BlockSpec((bt, k), lambda i: (i, 0)),
+                  pl.BlockSpec((bt, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        interpret=interpret,
+    )(buf, w, slot, rank, keep)

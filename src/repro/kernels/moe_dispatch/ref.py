@@ -1,0 +1,71 @@
+"""Pure-jnp oracle for the fused MoE dispatch/combine kernel family.
+
+Implements the *fused* dispatch algorithm (the one the Pallas kernel runs) in
+vectorized jnp, so it doubles as the fast off-TPU execution path:
+
+* **in-segment rank without a sort** — the XLA baseline in
+  ``models.moe.dispatch_combine`` ranks assignments inside their slot segment
+  via stable ``argsort`` + ``searchsorted``; for a stable sort that rank is
+  exactly "number of earlier assignments (in flat T*k order) with the same
+  slot", i.e. an exclusive running histogram.  We compute it directly from an
+  exclusive cumsum of the slot one-hot — bit-identical ranks, no sort.
+* **capacity mask** — ``keep = valid & (rank < cap)``; identical drop
+  decisions to the baseline by construction.
+* **bucketed scatter / weighted gather** — each kept assignment owns a unique
+  ``(slot, rank)`` bucket, so scatter-add is single-writer and the combine is
+  a plain gather + per-token weighted reduction.
+
+The Reshape load metrics (routed counts phi, kept counts, drops) fall out of
+the same one-hot, matching the baseline's metrics exactly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dispatch_ref(v, w, slot, valid, n_slots: int, cap: int):
+    """v [T,D]; w/slot/valid [T,k] (w f32 per-assignment scale, valid i32).
+
+    Returns (buf [S,C,D], rank [T,k] i32, keep [T,k] i32, routed [S] i32,
+    kept [S] i32).  ``buf[s, c] = w * v[tok]`` for the kept assignment ranked
+    ``c`` in slot ``s`` (zeros where unfilled).
+    """
+    t, d = v.shape
+    k = slot.shape[1]
+    n = t * k
+    flat_slot = slot.reshape(n)
+    flat_valid = valid.reshape(n) != 0
+    # invalid assignments rank in a virtual segment past n_slots-1, exactly
+    # like the baseline's sort-to-the-end trick
+    s_eff = jnp.where(flat_valid, flat_slot, n_slots)
+    oh = (s_eff[:, None] == jnp.arange(n_slots + 1)[None, :]).astype(jnp.int32)
+    rank = jnp.take_along_axis(jnp.cumsum(oh, 0) - oh, s_eff[:, None],
+                               1)[:, 0]
+    keep = flat_valid & (rank < cap)
+    rank = jnp.where(flat_valid, rank, 0)   # invalid ranks are meaningless
+    dest = jnp.where(keep, flat_slot * cap + rank, n_slots * cap)
+    tok = jnp.repeat(jnp.arange(t), k)
+    wm = (w.reshape(n) * keep).astype(v.dtype)
+    buf = jnp.zeros((n_slots * cap + 1, d), v.dtype).at[dest].add(
+        v[tok] * wm[:, None])
+    routed = oh[:, :n_slots].sum(0)
+    kept = (oh[:, :n_slots] * keep[:, None].astype(jnp.int32)).sum(0)
+    return (buf[:-1].reshape(n_slots, cap, d),
+            rank.reshape(t, k).astype(jnp.int32),
+            keep.reshape(t, k).astype(jnp.int32), routed, kept)
+
+
+def combine_ref(buf, w, slot, rank, keep):
+    """buf [S,C,D]; w [T,k] f32; slot/rank/keep [T,k] i32 -> y [T,D].
+
+    ``y[t] = sum_j w[t,j] * keep[t,j] * buf[slot[t,j], rank[t,j]]``.
+    """
+    s, cap, d = buf.shape
+    t, k = slot.shape
+    n = t * k
+    kb = keep.reshape(n) != 0
+    dest = jnp.where(kb, slot.reshape(n) * cap + rank.reshape(n), 0)
+    gathered = buf.reshape(s * cap, d)[dest]
+    wm = (w.reshape(n) * kb).astype(buf.dtype)
+    tok = jnp.repeat(jnp.arange(t), k)
+    return jnp.zeros((t, d), buf.dtype).at[tok].add(gathered * wm[:, None])

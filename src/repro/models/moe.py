@@ -105,13 +105,23 @@ def route(router_w, x, plan_slots, plan_cum, cfg: ArchConfig, token_offset=0):
 
 
 def dispatch_combine(x, slot, weight, expert_fn, n_slots: int, cap: int,
-                     valid=None):
+                     valid=None, fused: bool = False, impl: str = "auto"):
     """Sort-based capacity dispatch -> per-slot expert_fn -> weighted combine.
 
     x [T,D]; slot/weight [T,k]; ``valid`` [T,k] masks assignments owned by
     this shard (EP: foreign experts are some other rank's problem, not
     drops).  Returns (y [T,D], metrics dict).
+
+    ``fused=True`` routes through the fused Pallas dispatch/combine kernel
+    family (``kernels/moe_dispatch``): rank + capacity mask + bucketed
+    scatter in one kernel instead of the argsort/searchsorted/scatter
+    round-trip below, with bit-identical drop decisions and load metrics.
     """
+    if fused:
+        from repro.kernels.moe_dispatch.ops import \
+            dispatch_combine as fused_dc
+        return fused_dc(x, slot, weight, expert_fn, n_slots, cap,
+                        valid=valid, impl=impl)
     t, d = x.shape
     k = slot.shape[1]
     tk = t * k
@@ -203,7 +213,8 @@ def moe_ffn_sharded(p, x, plan_slots, plan_cum, cfg: ArchConfig, mesh,
 
         y, met = dispatch_combine(xl, local_slot.astype(jnp.int32),
                                   jnp.where(mine, weight, 0.0),
-                                  expert_fn, spr, cap, valid=mine)
+                                  expert_fn, spr, cap, valid=mine,
+                                  fused=m.fused_dispatch)
         y = jax.lax.psum(y, "model")
         slot_counts = met["kept_counts"]
         routed = met["slot_counts"]
@@ -285,23 +296,35 @@ def moe_ffn_a2a(p, x, plan_slots, plan_cum, cfg: ArchConfig, mesh,
         flat_w = weight.reshape(tk)
         tok = jnp.repeat(jnp.arange(t_loc), m_cfg.top_k)
 
-        # bucket per destination column (capacity-bounded, sort-based rank)
+        # bucket per destination column (capacity-bounded, sort-based rank;
+        # fused: the same rank/mask/scatter in one dispatch kernel)
         cap_s = max(4, int(tk * m_cfg.capacity_factor / mdl))
-        sort_idx = jnp.argsort(flat_col)
-        sorted_col = flat_col[sort_idx]
-        seg = jnp.searchsorted(sorted_col, jnp.arange(mdl))
-        pos_sorted = jnp.arange(tk, dtype=jnp.int32) - seg[sorted_col]
-        pos = jnp.zeros((tk,), jnp.int32).at[sort_idx].set(pos_sorted)
-        keep = pos < cap_s
-        dest = jnp.where(keep, flat_col * cap_s + pos, mdl * cap_s)
-        send_x = jnp.zeros((mdl * cap_s + 1, d), xl.dtype).at[dest].set(
-            xl[tok])
+        if m_cfg.fused_dispatch:
+            from repro.kernels.moe_dispatch import ops as _dops
+            all_valid = jnp.ones((t_loc, m_cfg.top_k), jnp.int32)
+            bt = _dops.block_rows(t_loc)
+            send_x3, rank2, keep2, _, _ = _dops.dispatch(
+                xl, jnp.ones((t_loc, m_cfg.top_k), jnp.float32), col_of,
+                all_valid, mdl, cap_s, "auto", bt)
+            pos = rank2.reshape(tk)
+            keep = keep2.reshape(tk) != 0
+            dest = jnp.where(keep, flat_col * cap_s + pos, mdl * cap_s)
+        else:
+            sort_idx = jnp.argsort(flat_col)
+            sorted_col = flat_col[sort_idx]
+            seg = jnp.searchsorted(sorted_col, jnp.arange(mdl))
+            pos_sorted = jnp.arange(tk, dtype=jnp.int32) - seg[sorted_col]
+            pos = jnp.zeros((tk,), jnp.int32).at[sort_idx].set(pos_sorted)
+            keep = pos < cap_s
+            dest = jnp.where(keep, flat_col * cap_s + pos, mdl * cap_s)
+            send_x = jnp.zeros((mdl * cap_s + 1, d), xl.dtype).at[dest].set(
+                xl[tok])
+            send_x3 = send_x[:-1].reshape(mdl, cap_s, d)
         send_slot = jnp.full((mdl * cap_s + 1,), -1, jnp.int32).at[dest].set(
             jnp.where(keep, flat_slot, -1))
         # exchange: [m, C, D] -> every column receives my bucket for it
-        rx = jax.lax.all_to_all(send_x[:-1].reshape(mdl, cap_s, d),
-                                "model", split_axis=0, concat_axis=0,
-                                tiled=False)
+        rx = jax.lax.all_to_all(send_x3, "model", split_axis=0,
+                                concat_axis=0, tiled=False)
         rs = jax.lax.all_to_all(send_slot[:-1].reshape(mdl, cap_s),
                                 "model", split_axis=0, concat_axis=0,
                                 tiled=False)
@@ -321,14 +344,20 @@ def moe_ffn_a2a(p, x, plan_slots, plan_cum, cfg: ArchConfig, mesh,
         y_rx, met = dispatch_combine(rx, local_slot[:, None],
                                      valid[:, None].astype(jnp.float32),
                                      expert_fn, spr, cap2,
-                                     valid=valid[:, None])
+                                     valid=valid[:, None],
+                                     fused=m_cfg.fused_dispatch)
         # return path + weighted combine at the source
         y_back = jax.lax.all_to_all(y_rx.reshape(mdl, cap_s, d), "model",
                                     split_axis=0, concat_axis=0, tiled=False)
-        y_back = y_back.reshape(mdl * cap_s, d)
-        gathered = y_back[jnp.where(keep, dest, 0)]
-        y = jnp.zeros((t_loc, d), xl.dtype).at[tok].add(
-            gathered * (flat_w * keep)[:, None].astype(xl.dtype))
+        if m_cfg.fused_dispatch:
+            y = _dops.combine(y_back, weight.astype(jnp.float32), col_of,
+                              rank2, keep2, all_valid, "auto", bt)
+            y = y.astype(xl.dtype)
+        else:
+            y_back = y_back.reshape(mdl * cap_s, d)
+            gathered = y_back[jnp.where(keep, dest, 0)]
+            y = jnp.zeros((t_loc, d), xl.dtype).at[tok].add(
+                gathered * (flat_w * keep)[:, None].astype(xl.dtype))
 
         # metrics (global): slot counts live on the expert's column
         slot_counts = met["kept_counts"]
@@ -392,7 +421,8 @@ def moe_ffn(p, x, plan_slots, plan_cum, cfg: ArchConfig, token_offset=0,
         u = jnp.einsum("scd,sdf->scf", buf, p["w_up"].astype(buf.dtype))
         return jnp.einsum("scf,sfd->scd", g * u, p["w_down"].astype(buf.dtype))
 
-    y, metrics = dispatch_combine(x, slot, weight, expert_fn, s, cap)
+    y, metrics = dispatch_combine(x, slot, weight, expert_fn, s, cap,
+                                  fused=m.fused_dispatch)
 
     # Switch-style load-balance aux loss over *logical* experts.  With fused
     # gating the histogram comes straight from the kernel.

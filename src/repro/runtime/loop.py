@@ -31,7 +31,7 @@ from repro.core.controller import Controller, ReplayingController
 from repro.core.reshape_moe import MoEReshaper
 from repro.data.synthetic import TokenStream
 from repro.engine.engine import Engine
-from repro.engine.jobs import Job
+from repro.engine.jobs import Job, dispatch_kind
 from repro.models import lm
 from repro.models import moe as moe_lib
 from repro.runtime.train import (TrainHyper, build_fused_step,
@@ -48,6 +48,11 @@ class LoopConfig:
     # when interactivity is in use (pending message / breakpoint / pause /
     # replay); "granulated" and "fused" force one path (benchmarks).
     step_path: str = "auto"
+    # MoE dispatch kernel selection: "off" keeps the cfg's fused_dispatch
+    # setting; "auto" lets the engine pick fused-vs-XLA per shape from
+    # measured CostBook step times; "fused"/"xla" force one impl.  Only
+    # meaningful for MoE configs.
+    dispatch_select: str = "off"
 
 
 class TrainLoop:
@@ -63,6 +68,8 @@ class TrainLoop:
         self.lc = loop_cfg
         assert loop_cfg.step_path in ("auto", "fused", "granulated"), \
             loop_cfg.step_path
+        assert loop_cfg.dispatch_select in ("off", "auto", "fused", "xla"), \
+            loop_cfg.dispatch_select
         assert engine is None or controller is None, \
             "pass either an engine or a bare controller, not both"
         self.engine = engine or Engine(controller=controller)
@@ -70,6 +77,14 @@ class TrainLoop:
         self.state = make_state(cfg, jax.random.PRNGKey(seed))
         self.grad_mb, self.apply, self.migrate = build_grad_step(cfg, hyper)
         self.fused_step = build_fused_step(cfg, hyper)
+        # per-dispatch-impl step fns, built lazily when the engine is
+        # selecting the MoE dispatch kernel at runtime (dispatch_select);
+        # _impl_warm tracks which (impl, path) jits have already run once,
+        # so their compile-carrying first step is marked cold and never
+        # enters ANY cost EMA (a fresh impl jit would otherwise poison the
+        # train_step_* estimates and flip the step-path decision)
+        self._impl_fns: Dict[str, Any] = {}
+        self._impl_warm: set = set()
         self._plan_dev = None            # cached device-resident plan arrays
         nl = lm.n_moe_layers(cfg)
         if nl:
@@ -162,6 +177,23 @@ class TrainLoop:
         return self._plan_dev
 
     # ----------------------------------------------------------------- run
+    def _dispatch_impl(self, n_tok: int):
+        """Engine-chosen MoE dispatch kernel for this step (or None when
+        selection is off / the model has no MoE).  Returns (impl,
+        (grad_mb, fused_step)) — the step fns jitted for that impl."""
+        if self.lc.dispatch_select == "off" or self.cfg.moe is None:
+            return None, (self.grad_mb, self.fused_step)
+        forced = ("auto" if self.lc.dispatch_select == "auto"
+                  else self.lc.dispatch_select)
+        impl = self.engine.choose_dispatch_impl(n_tok, forced=forced)
+        if impl not in self._impl_fns:
+            c = dataclasses.replace(
+                self.cfg, moe=dataclasses.replace(
+                    self.cfg.moe, fused_dispatch=(impl == "fused")))
+            gm, _, _ = build_grad_step(c, self.hyper)
+            self._impl_fns[impl] = (gm, build_fused_step(c, self.hyper))
+        return impl, self._impl_fns[impl]
+
     def _fused_eligible(self) -> bool:
         """Step-path choice, delegated to the engine.  Whenever interactivity
         is actually in use (pending/replaying message, breakpoint, paused)
@@ -187,9 +219,10 @@ class TrainLoop:
                 # breakpoints, which re-check every iteration)
                 self.global_bps.remove(bp)
 
-    def _step_granulated(self, step: int, batch, n_mb: int):
+    def _step_granulated(self, step: int, batch, n_mb: int, grad_mb=None):
         """One training step at microbatch control granularity (§2.4.3).
         Returns (step_metrics, stopped); metrics is None when stopped."""
+        grad_mb = self.grad_mb if grad_mb is None else grad_mb
         gb = batch["tokens"].shape[0]
         mb_sz = gb // n_mb
         grads = None
@@ -204,8 +237,8 @@ class TrainLoop:
                     jnp.float32)
             ps, pc = self._plan_args()
             offset = (step * n_mb + i) * mb_sz * self.stream.seq_len
-            g, metrics = self.grad_mb(self.state["params"], mbd, ps, pc,
-                                      jnp.asarray(offset))
+            g, metrics = grad_mb(self.state["params"], mbd, ps, pc,
+                                 jnp.asarray(offset))
             grads = g if grads is None else jax.tree.map(
                 lambda a, b: a + b, grads, g)
             m_host = {k: np.asarray(v) for k, v in metrics.items()}
@@ -221,9 +254,10 @@ class TrainLoop:
         step_metrics.update({k: np.asarray(v) for k, v in opt_m.items()})
         return step_metrics, False
 
-    def _step_fused(self, batch, n_mb: int) -> Dict[str, Any]:
+    def _step_fused(self, batch, n_mb: int, fused_step=None) -> Dict[str, Any]:
         """One training step through the fused jit: all microbatches scanned
         in-device, one dispatch, one device->host metrics fetch."""
+        fused_step = self.fused_step if fused_step is None else fused_step
         gb = batch["tokens"].shape[0]
         used = (gb // n_mb) * n_mb      # granulated path drops the remainder
         bd = {"tokens": jnp.asarray(batch["tokens"][:used])}
@@ -231,7 +265,7 @@ class TrainLoop:
             bd["frames"] = jnp.zeros(
                 (used, self.cfg.enc_seq, self.cfg.d_model), jnp.float32)
         ps, pc = self._plan_args()
-        self.state, mb_metrics, opt_m = self.fused_step(
+        self.state, mb_metrics, opt_m = fused_step(
             self.state, bd, ps, pc, jnp.asarray(self.lc.lr_scale),
             n_mb=n_mb)
         mb_host, opt_host = jax.device_get((mb_metrics, opt_m))
@@ -259,23 +293,38 @@ class TrainLoop:
                 break
             batch = self.stream.next()
             n_tok = int(batch["tokens"].size)
-            if self._fused_eligible():
+            impl, (grad_mb, fused_step) = self._dispatch_impl(n_tok)
+            fused_path = self._fused_eligible()
+            extra, meta = (), None
+            if impl is not None:
+                key = (impl, fused_path)
+                meta = {"cold": key not in self._impl_warm}
+                self._impl_warm.add(key)
+                if fused_path:
+                    # dispatch-impl samples come from fused-path steps only:
+                    # mixing fused- and granulated-step durations under one
+                    # dispatch_kind key would compare the impls across
+                    # different step paths, not against each other
+                    extra = (Job(dispatch_kind(impl, n_tok), tokens=n_tok,
+                                 meta=meta),)
+            if fused_path:
                 step_metrics = self.engine.run_job(
-                    Job("train_step_fused", tokens=n_tok),
-                    lambda: self._step_fused(batch, n_mb))
+                    Job("train_step_fused", tokens=n_tok, meta=meta),
+                    lambda: self._step_fused(batch, n_mb, fused_step),
+                    extra=extra)
             else:
                 t0 = time.perf_counter()
                 log_before = len(self.controller.log)
-                step_metrics, stopped = self._step_granulated(step, batch,
-                                                              n_mb)
+                step_metrics, stopped = self._step_granulated(
+                    step, batch, n_mb, grad_mb)
                 if stopped:
                     break
                 if len(self.controller.log) == log_before:
                     # clean measurement only: a step that served control
                     # messages (or sat paused) must not poison the cost model
                     self.engine.observe(
-                        Job("train_step_granulated", tokens=n_tok),
-                        time.perf_counter() - t0)
+                        Job("train_step_granulated", tokens=n_tok,
+                            meta=meta), time.perf_counter() - t0)
             self.history.append({"step": step, **{
                 k: (float(v) if np.ndim(v) == 0 else v)
                 for k, v in step_metrics.items()}})
