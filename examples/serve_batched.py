@@ -78,6 +78,32 @@ print(f"\nstream finished under control: {done} tokens over {eng.tick_no} "
       f"ticks; decisions tail: "
       f"{[d['choice'] for d in eng.engine.decisions[-6:]]}")
 
+# ---- speculative in-tick decoding ----------------------------------------
+# a per-slot n-gram suffix table (living in the donated pool) drafts up to
+# cfg.serve.spec_len tokens per decode tick; the tick scan verifies them and
+# commits the longest accepted prefix (greedy outputs bit-identical).  The
+# plain-vs-spec arm is an engine decision from the measured acceptance EMA.
+eng = ServeEngine(cfg, params, max_len=160, slots=2, prefill_chunk=8,
+                  decode_chunk=4, spec_decode=True)
+# pin the arm on for the demo (auto mode lets the CostBook decide, and on
+# CPU smoke scale the measured decision usually keeps plain — see
+# bench_serve_spec); forcing it shows the acceptance machinery learning
+_choose = eng.engine.choose_serve_tick
+eng.engine.choose_serve_tick = lambda *a, **k: (
+    "spec" if _choose(*a, **k) == "decode" and k.get("spec_len", 0) > 1
+    else _choose(*a, **k))
+for _ in range(2):
+    eng.submit(np.random.default_rng(1).integers(
+        1, cfg.vocab, (8,)).astype(np.int32), max_new=48)
+eng.run_until_done()
+acc = eng.spec_accepted / max(eng.spec_proposed, 1)
+print(f"\nspeculative decode (arm pinned on): {eng.spec_ticks} spec ticks, "
+      f"acceptance={acc:.2f} ({eng.spec_accepted}/{eng.spec_proposed} "
+      f"drafts); the auto decision from these measurements would be: "
+      f"{[d['choice'] for d in eng.engine.decisions[-2:]]}; "
+      f"accept EMA keys: "
+      f"{[k for k in eng.engine.costs.snapshot() if 'accept' in k]}")
+
 # ---- the Maestro region view the engine schedules with --------------------
 wf = serve_tick_workflow(decode_slots=2, decode_chunk=4, prefill_tokens=64,
                          t_token=0.01)

@@ -44,6 +44,28 @@ class MoECfg:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeCfg:
+    """Serve-side engine knobs (ServeEngine).
+
+    Speculative in-tick decoding: a per-slot n-gram suffix-hash table (living
+    in the donated slot pool, no host round-trip) proposes up to ``spec_len``
+    tokens per decode tick; the target model verifies them in the same
+    chunk-scan dispatch and an in-jit acceptance mask commits the longest
+    accepted prefix, so greedy outputs stay bit-identical to plain decode.
+    Whether a tick runs the speculative or the plain arm is an *engine*
+    decision made from the measured per-pool acceptance-rate EMA
+    (``Engine.choose_serve_tick``)."""
+    # max tokens proposed+verified per speculative tick (the verify-scan
+    # length); <= 1 disables the speculative arm entirely.
+    spec_len: int = 4
+    # suffix-hash table entries per slot (power of two).  Collisions only
+    # produce bad drafts — they cost acceptance, never correctness.
+    spec_table: int = 512
+    # n-gram context length (tokens hashed to index the table).
+    spec_ctx: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
 class SSMCfg:
     state_size: int = 64
     head_dim: int = 64
@@ -69,6 +91,7 @@ class ArchConfig:
     mrope: bool = False              # qwen2-vl M-RoPE (3-section rotary)
     moe: Optional[MoECfg] = None
     ssm: Optional[SSMCfg] = None
+    serve: ServeCfg = dataclasses.field(default_factory=ServeCfg)
     # encoder (whisper): encoder layer count + source length of frame embeddings
     enc_layers: int = 0
     enc_seq: int = 1500

@@ -48,8 +48,10 @@ def _json_restore(x):
             import numpy as _np
             return _np.asarray(x["__ndarray__"], dtype=x["dtype"])
         if "__dataclass__" in x:
+            from repro.core import breakpoints as _bp
             from repro.core import reshape_moe as _rm
-            cls = getattr(_rm, x["__dataclass__"], None)
+            cls = getattr(_rm, x["__dataclass__"],
+                          getattr(_bp, x["__dataclass__"], None))
             fields = {k: _json_restore(v) for k, v in x["fields"].items()}
             return cls(**fields) if cls is not None else fields
         return {k: _json_restore(v) for k, v in x.items()}
@@ -101,7 +103,7 @@ class Controller:
         rec = LogRecord(msg.kind, msg.payload, msg.seq, step, microbatch)
         self.log.append(rec)
         if self.durable_log_path and msg.kind in ("update", "plan", "pause",
-                                                  "resume"):
+                                                  "resume", "breakpoint"):
             import json as _json
             d = {"kind": rec.kind, "payload": _json_safe(rec.payload),
                  "seq": rec.seq, "step": rec.step,

@@ -71,6 +71,15 @@ class CostBook:
             self._est[kind] = EMAEstimator(self._beta)
         self._est[kind].add(seconds)
 
+    def observe_rate(self, kind: str, frac: float) -> None:
+        """Rates — e.g. a slot pool's speculative-decode acceptance fraction
+        — live next to the runtime EMAs under the same estimator family, but
+        are clamped to [0, 1] on the way in: a single mis-counted tick must
+        not push an estimate outside the quantity's domain, where the
+        decision code (expected commits = ``1 + a·(k-1)``) would extrapolate
+        nonsense."""
+        self.observe(kind, min(max(float(frac), 0.0), 1.0))
+
     def estimate(self, kind: str, default: float | None = None):
         """EMA of measured runtimes for ``kind``; ``default`` when unmeasured
         (the engine's bootstrap: decide with priors until jobs have run)."""

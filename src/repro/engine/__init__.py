@@ -7,10 +7,11 @@ book + decisions), ``engine.jobs`` (the job -> region-workflow mapping), and
 ``runtime.serve`` are clients of this layer.
 """
 from repro.engine.engine import Engine
-from repro.engine.jobs import (Job, checkpoint_workflow, serve_tick_workflow,
+from repro.engine.jobs import (Job, accept_kind, checkpoint_workflow,
+                               serve_decode_workflow, serve_tick_workflow,
                                train_step_workflow)
 from repro.engine.serve import Request, ServeEngine, build_slot_tick
 
-__all__ = ["Engine", "Job", "Request", "ServeEngine", "build_slot_tick",
-           "checkpoint_workflow", "serve_tick_workflow",
-           "train_step_workflow"]
+__all__ = ["Engine", "Job", "Request", "ServeEngine", "accept_kind",
+           "build_slot_tick", "checkpoint_workflow", "serve_decode_workflow",
+           "serve_tick_workflow", "train_step_workflow"]

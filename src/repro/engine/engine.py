@@ -16,7 +16,11 @@ against measured costs:
   out of the cost model instead of being hard-coded.
 * ``choose_serve_tick`` — decode-only vs prefill tick composition for the
   serving engine: min first-response-time with an aging bound so prefills
-  cannot starve (§4.5's min-FRT objective applied online).
+  cannot starve (§4.5's min-FRT objective applied online).  When the
+  serving engine offers the speculative arm, the decode choice further
+  splits into plain vs speculative k-token ticks, decided from the pool's
+  measured acceptance-rate EMA — acceptance is exactly the kind of
+  measured, result-aware signal the CostBook exists for.
 
 Workers (``TrainLoop``, ``ServeEngine``) are engine *clients*: they hand the
 engine their inspect callback and their job thunks and let it decide.
@@ -49,6 +53,7 @@ class Engine:
         self.max_prefill_defer = max_prefill_defer
         self._prefill_defer = 0
         self._dispatch_rounds: Dict[int, int] = {}
+        self._serve_rounds: Dict[int, int] = {}
         self._cm = CostModel(parallelism=1.0)
 
     # ---------------------------------------------------------- control plane
@@ -97,6 +102,14 @@ class Engine:
         self.costs.observe(job.kind, seconds)
         if job.tokens:
             self.costs.observe(job.kind + "_per_tok", seconds / job.tokens)
+
+    def observe_accept(self, pool_id: int, frac: float) -> None:
+        """Feed one speculative tick's acceptance fraction (committed drafts
+        / proposed drafts) into the pool's acceptance-rate EMA.  Unlike job
+        runtimes there is no compile-warm-up to skip — the first tick's
+        acceptance is as real as the hundredth's — so this writes straight
+        to the CostBook."""
+        self.costs.observe_rate(J.accept_kind(pool_id), frac)
 
     def _decide(self, kind: str, choice: str, **detail) -> str:
         self.decisions.append({"decision": kind, "choice": choice, **detail})
@@ -177,11 +190,18 @@ class Engine:
 
     def choose_serve_tick(self, decode_slots: int, prefill_slots: int,
                           prefill_tokens: int, decode_chunk: int,
-                          prefill_chunk: int) -> str:
-        """Tick composition: 'decode' (short, decode-state slots only) or
-        'prefill' (long, every active slot advances a prefill_chunk)."""
+                          prefill_chunk: int, spec_len: int = 0,
+                          pool_id: int = 0) -> str:
+        """Tick composition: 'decode' (short, decode-state slots only),
+        'prefill' (long, every active slot advances a prefill_chunk), or —
+        when the serving engine offers it (``spec_len > 1``) — 'spec', the
+        speculative k-token decode arm.  The decode-vs-prefill choice is
+        min-FRT with an aging bound; the plain-vs-spec split is a separate
+        throughput decision over measured acceptance (``_choose_decode_arm``)
+        taken only once a decode-composition tick has won."""
         if prefill_slots == 0:
-            return "decode"
+            return self._choose_decode_arm(decode_slots, decode_chunk,
+                                           spec_len, pool_id)
         if decode_slots == 0:
             self._prefill_defer = 0
             return self._decide("serve_tick", "prefill", why="no_decoders")
@@ -190,7 +210,9 @@ class Engine:
             return self._decide("serve_tick", "prefill", why="aging")
         t_tok = self.costs.estimate(
             "serve_decode_per_tok",
-            self.costs.estimate("serve_prefill_per_tok", 1e-3))
+            self.costs.estimate(
+                "serve_spec_decode_per_tok",
+                self.costs.estimate("serve_prefill_per_tok", 1e-3)))
         chunk_now = min(prefill_tokens, prefill_chunk * prefill_slots)
         wf_d = J.serve_tick_workflow(decode_slots, decode_chunk, 0, t_tok)
         wf_p = J.serve_tick_workflow(decode_slots, prefill_chunk,
@@ -199,9 +221,59 @@ class Engine:
         frt_p = first_response_time(wf_p, frozenset(), self._cm)
         if frt_d <= frt_p:
             self._prefill_defer += 1
-            return self._decide("serve_tick", "decode",
-                                frt={"decode": frt_d, "prefill": frt_p},
-                                defer=self._prefill_defer)
+            self._decide("serve_tick", "decode",
+                         frt={"decode": frt_d, "prefill": frt_p},
+                         defer=self._prefill_defer)
+            return self._choose_decode_arm(decode_slots, decode_chunk,
+                                           spec_len, pool_id)
         self._prefill_defer = 0
         return self._decide("serve_tick", "prefill",
                             frt={"decode": frt_d, "prefill": frt_p})
+
+    def _choose_decode_arm(self, decode_slots: int, decode_chunk: int,
+                           spec_len: int, pool_id: int) -> str:
+        """Plain vs speculative decode tick, per slot pool.
+
+        Both arms are scored as ``jobs.serve_decode_workflow`` region
+        workflows under ``completion_time``, normalized by the tokens a tick
+        is *expected to commit*: ``decode_chunk`` for the plain arm (every
+        scan step commits a token), ``1 + a·(spec_len-1)`` for the
+        speculative arm, with ``a`` the pool's measured acceptance-rate EMA
+        — low acceptance prices the wasted verify steps in and flips the
+        choice back to plain even when the verify step itself is cheaper.
+        Bootstrap explores the speculative arm first (it is the only way
+        acceptance gets measured); the losing arm is re-explored every 16th
+        round like ``choose_dispatch_impl`` so a stale acceptance or
+        runtime EMA cannot wedge the choice — workloads drift between
+        repetitive and incompressible text."""
+        if spec_len <= 1:
+            return "decode"
+        a = self.costs.estimate(J.accept_kind(pool_id))
+        t_s = self.costs.estimate("serve_spec_decode_per_tok")
+        if a is None or t_s is None:
+            return self._decide("serve_decode_arm", "spec", why="bootstrap",
+                                pool=pool_id)
+        t_p = self.costs.estimate("serve_decode_per_tok")
+        if t_p is None:
+            return self._decide("serve_decode_arm", "decode", why="explore",
+                                pool=pool_id)
+        scores = {}
+        for arm, wf, committed in (
+                ("decode",
+                 J.serve_decode_workflow("plain", decode_slots, decode_chunk,
+                                         t_p),
+                 float(decode_chunk)),
+                ("spec",
+                 J.serve_decode_workflow("spec", decode_slots, spec_len,
+                                         t_s, accept=a),
+                 1.0 + a * (spec_len - 1))):
+            scores[arm] = completion_time(wf, self._cm) / max(committed,
+                                                              1e-9)
+        best = min(scores, key=scores.get)
+        self._serve_rounds[pool_id] = self._serve_rounds.get(pool_id, 0) + 1
+        if self._serve_rounds[pool_id] % 16 == 0:
+            loser = "spec" if best == "decode" else "decode"
+            return self._decide("serve_decode_arm", loser, why="re-explore",
+                                pool=pool_id, accept=a, scores=scores)
+        return self._decide("serve_decode_arm", best, pool=pool_id,
+                            accept=a, scores=scores)

@@ -38,7 +38,8 @@ class Job:
     ``kind`` doubles as the CostBook key, so every job the engine runs
     refines the cost model used to schedule the next one."""
     kind: str                 # train_step_fused | train_step_granulated |
-    #                           serve_prefill | serve_decode | checkpoint
+    #                           serve_prefill | serve_decode |
+    #                           serve_spec_decode | checkpoint
     tokens: int = 0           # data-plane size (tokens processed)
     meta: Optional[dict] = None
 
@@ -148,6 +149,56 @@ def serve_tick_workflow(decode_slots: int, decode_chunk: int,
     return wf
 
 
+def accept_kind(pool_id: int) -> str:
+    """CostBook key for a slot pool's speculative-decode acceptance-rate
+    EMA.  Keyed per pool: pools serve different traffic (one engine may own
+    several), and acceptance is a property of the *workload* flowing through
+    a pool, not of the machine."""
+    return f"serve_accept:p{pool_id}"
+
+
+def serve_decode_workflow(arm: str, decode_slots: int, chunk: int,
+                          t_token: float, accept: float = 0.0) -> Workflow:
+    """One decode-composition tick as a region workflow, per arm.
+
+    ``plain``: the decode op runs ``chunk`` scan steps, each sampling (and
+    therefore committing) one token per slot — its selectivity is ``chunk``,
+    so the sink's cardinality is exactly the committed-token count.
+
+    ``spec``: the draft op reads the in-pool n-gram table (no model work —
+    its cost rides inside the verify dispatch), the verify op pays the full
+    ``chunk`` scan steps (selectivity ``chunk``: every verified position is
+    a candidate token), and the commit op keeps only the accepted prefix:
+    its *selectivity* is ``(1 + accept·(chunk-1)) / chunk``, so the sink's
+    cardinality is the expected committed-token count.  Region time is paid
+    on the verify op regardless of acceptance — exactly the speculative
+    gamble.  The engine scores both arms under ``completion_time``
+    normalized by expected commits (``Engine._choose_decode_arm``)."""
+    wf = Workflow()
+    wf.add_op(Op("requests", "scan", cost_per_tuple=0.0,
+                 source_cardinality=float(max(decode_slots, 1))))
+    if arm == "plain":
+        wf.add_op(Op("decode", "ml", cost_per_tuple=t_token * chunk,
+                     selectivity=float(chunk)))
+        wf.add_op(Op("stream_out", "sink", cost_per_tuple=0.0))
+        wf.add_edge("requests", "decode")
+        wf.add_edge("decode", "stream_out")
+        return wf
+    assert arm == "spec", arm
+    committed = 1.0 + accept * max(chunk - 1, 0)
+    wf.add_op(Op("draft", "ml", cost_per_tuple=0.0))
+    wf.add_op(Op("verify", "ml", cost_per_tuple=t_token * chunk,
+                 selectivity=float(chunk)))
+    wf.add_op(Op("commit", "ml", cost_per_tuple=0.0,
+                 selectivity=committed / max(chunk, 1)))
+    wf.add_op(Op("stream_out", "sink", cost_per_tuple=0.0))
+    wf.add_edge("requests", "draft")
+    wf.add_edge("draft", "verify")
+    wf.add_edge("verify", "commit")
+    wf.add_edge("commit", "stream_out")
+    return wf
+
+
 def checkpoint_workflow(t_save: float) -> Workflow:
     """Checkpoint as a blocking region between steps (the §2.6 barrier)."""
     wf = Workflow()
@@ -165,6 +216,7 @@ COST_DEFAULTS: Dict[str, float] = {
     "train_step_fused": 0.05,
     "train_step_granulated": 0.10,
     "serve_decode": 0.01,
+    "serve_spec_decode": 0.01,
     "serve_prefill": 0.05,
     "checkpoint": 0.50,
 }

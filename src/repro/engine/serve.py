@@ -22,6 +22,23 @@ prefill) is a Maestro min-FRT choice over the two candidate region
 workflows (``jobs.serve_tick_workflow``): short decode ticks preempt long
 prefills until the aging bound forces prefill progress.
 
+**Speculative in-tick decoding** (``spec_decode=True``): a per-slot n-gram
+suffix-hash table — int32 arrays living in the donated slot pool, updated
+in-jit from every token the slot streams (prompt and generated alike), so
+proposing costs no host round-trip — drafts up to ``cfg.serve.spec_len``
+tokens per decode tick.  The target model verifies the whole draft chain in
+the same chunk-scan dispatch: a carried ``valid`` mask commits the longest
+accepted prefix and masks every state update (caches, pos, table) past the
+first mismatch, which keeps *all* cache families correct (recurrent and
+conv state cannot be position-rewound the way KV rows can) and makes greedy
+outputs bit-identical to plain decode by construction — an accepted draft
+IS the token greedy decode would have fed.  Whether a decode tick runs the
+speculative or the plain arm is an engine decision from measured
+acceptance-rate and runtime EMAs (``Engine.choose_serve_tick``); the
+speculative arm is host-gated to all-greedy participants because verifying
+sampled (temperature > 0) continuations greedily would change their
+distribution.
+
 The per-slot compute is ``jax.vmap`` over the stock ``lm.decode_step`` —
 per-slot positions come from batching the *function*, not from touching the
 block-level cache layouts — and greedy outputs are bit-identical to the old
@@ -30,6 +47,7 @@ token-by-token server (the regression oracle in the tests).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import threading
 from collections import deque
@@ -55,39 +73,140 @@ def sample_traced(logits, key, temp):
     return jnp.where(temp > 0, samp, greedy)
 
 
-def build_slot_tick(cfg: ArchConfig):
+# xxhash/murmur-style odd multipliers, one per n-gram context position
+_NG_MULTS = (0x9E3779B1, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F)
+
+
+@functools.lru_cache(maxsize=None)
+def build_slot_tick(cfg: ArchConfig, spec_len: int = 0):
     """Jitted tick: vmap of a per-slot chunk scan over ``lm.decode_step``.
 
-    Per slot: caches (leaves ``[n, 1, S, ...]``), scalar pos, tokens
-    ``[chunk]``, ``n_given`` (how many are prompt/pending tokens — the rest
-    are sampled in-jit), active mask, PRNG key, temperature.  Emits the
-    ``[chunk]`` sampled tokens; position ``j``'s emission is the model's
-    continuation after consuming token ``j``.  Inactive slots run (vmap is
-    rectangular) but their state updates are masked out.
-    """
+    Per slot: a pool row (cache leaves ``[n, 1, S, ...]`` plus the n-gram
+    suffix table ``ng [T]`` and its context window ``ctx [n_ctx]``), scalar
+    pos, tokens ``[chunk]``, ``n_given`` (how many are prompt/pending tokens
+    — the rest are sampled in-jit), active mask, PRNG key, temperature.
+    Emits the ``[chunk]`` sampled tokens plus ``n_valid`` (committed count);
+    position ``j``'s emission is the model's continuation after consuming
+    token ``j``.  Inactive slots run (vmap is rectangular) but their state
+    updates are masked out.
 
-    def one_slot(params, caches, pos, toks, n_given, active, reset, key,
+    Every tick — plain and speculative — *learns* in-jit: each fed token is
+    written into the slot's suffix table under the hash of the ``n_ctx``
+    tokens that preceded it, so the table is warm whichever arm the engine
+    ran last (collisions only cost acceptance, never correctness).
+
+    ``spec_len > 0`` builds the speculative variant (decode-only, all-greedy
+    participants): the suffix table proposes a ``spec_len``-token draft
+    chain ahead of the scan; the scan verifies it with a carried ``valid``
+    mask that freezes caches/pos/table past the first mismatch, and
+    ``n_valid`` reports the committed prefix (the accepted drafts plus the
+    model's own correction token).  No sampling and no PRNG-key advance
+    happen on this path — the keys pass through untouched.
+
+    Memoized per (cfg, spec_len): every ServeEngine over the same config
+    shares one jit, so compiled tick specializations are reused across
+    engine instances (the differential test harness builds hundreds).
+    """
+    table = cfg.serve.spec_table
+    n_ctx = cfg.serve.spec_ctx
+    assert table & (table - 1) == 0, "serve.spec_table must be a power of 2"
+    assert 1 <= n_ctx <= len(_NG_MULTS), "serve.spec_ctx out of range"
+
+    def ng_hash(ctx):
+        h = jnp.uint32(0)
+        for i in range(n_ctx):
+            h = h ^ (ctx[i].astype(jnp.uint32) * jnp.uint32(_NG_MULTS[i]))
+        return (h & jnp.uint32(table - 1)).astype(jnp.int32)
+
+    def push(ctx, tok):
+        if n_ctx == 1:
+            return tok[None]
+        return jnp.concatenate([ctx[1:], tok[None]])
+
+    def one_slot(params, pool, pos, toks, n_given, active, reset, key,
                  temp):
-        # a freshly joined slot starts from a zeroed cache row and pos 0 —
-        # folded into the tick so the join costs no eager scatter dispatches
+        caches, ng, ctx = pool["caches"], pool["ng"], pool["ctx"]
+        # a freshly joined slot starts from a zeroed cache row, an empty
+        # suffix table and pos 0 — folded into the tick so the join costs
+        # no eager scatter dispatches
         caches = jax.tree.map(
             lambda c: jnp.where(reset, jnp.zeros_like(c), c), caches)
+        ng = jnp.where(reset, 0, ng)
+        ctx = jnp.where(reset, 0, ctx)
         pos = jnp.where(reset, 0, pos)
+        L = toks.shape[0]
+
+        if spec_len:
+            # draft chain: successor lookups from the suffix table, seeded
+            # by the pending token toks[0]; lookup key = the n_ctx-token
+            # window ending at the predecessor
+            def propose(carry, _):
+                win, tok = carry
+                win = push(win, tok)
+                nxt = ng[ng_hash(win)]
+                return (win, nxt), nxt
+
+            if L > 1:
+                _, drafts = jax.lax.scan(propose, (ctx, toks[0]), None,
+                                         length=L - 1)
+                toks = jnp.concatenate([toks[:1], drafts])
+
+            def body(carry, j):
+                caches, pos, ng, win, valid = carry
+                tok = toks[j]
+                # learn the stream (valid steps only: rejected drafts are
+                # not real stream tokens and would poison the table)
+                hidx = ng_hash(win)
+                ng = ng.at[hidx].set(jnp.where(valid, tok, ng[hidx]))
+                win = jnp.where(valid, push(win, tok), win)
+                logits, new = lm.decode_step(
+                    params, {"caches": caches, "pos": pos}, tok[None, None],
+                    cfg)
+                nxt = jnp.argmax(logits[0], -1).astype(jnp.int32)
+                # freeze ALL state past the first mismatch: recurrent/conv
+                # caches cannot be position-rewound, so rejected steps must
+                # never have written anything
+                caches = jax.tree.map(
+                    lambda o, n: jnp.where(valid, n, o), caches,
+                    new["caches"])
+                pos = jnp.where(valid, new["pos"], pos)
+                nxt_ok = jnp.where(j + 1 < L,
+                                   toks[jnp.minimum(j + 1, L - 1)] == nxt,
+                                   False)
+                return (caches, pos, ng, win, valid & nxt_ok), (nxt, valid)
+
+            (c2, p2, ng2, ctx2, _), (emitted, valids) = jax.lax.scan(
+                body, (caches, pos, ng, ctx, jnp.bool_(True)),
+                jnp.arange(L))
+            pool_f = {"caches": jax.tree.map(
+                lambda o, n: jnp.where(active, n, o), caches, c2),
+                "ng": jnp.where(active, ng2, ng),
+                "ctx": jnp.where(active, ctx2, ctx)}
+            n_valid = jnp.where(active, valids.sum(dtype=jnp.int32), 0)
+            return (pool_f, jnp.where(active, p2, pos), key, emitted,
+                    n_valid)
 
         def body(carry, j):
-            caches, pos, prev, key = carry
+            caches, pos, prev, key, ng, win = carry
             tok = jnp.where(j < n_given, toks[j], prev)
+            hidx = ng_hash(win)
+            ng = ng.at[hidx].set(tok)
+            win = push(win, tok)
             logits, new = lm.decode_step(
                 params, {"caches": caches, "pos": pos}, tok[None, None], cfg)
             key, sub = jax.random.split(key)
             nxt = sample_traced(logits[0], sub, temp)
-            return (new["caches"], new["pos"], nxt, key), nxt
+            return (new["caches"], new["pos"], nxt, key, ng, win), nxt
 
-        (c2, p2, _, k2), emitted = jax.lax.scan(
-            body, (caches, pos, toks[0], key), jnp.arange(toks.shape[0]))
-        c_f = jax.tree.map(lambda o, n: jnp.where(active, n, o), caches, c2)
-        return (c_f, jnp.where(active, p2, pos),
-                jnp.where(active, k2, key), emitted)
+        (c2, p2, _, k2, ng2, ctx2), emitted = jax.lax.scan(
+            body, (caches, pos, toks[0], key, ng, ctx), jnp.arange(L))
+        pool_f = {"caches": jax.tree.map(
+            lambda o, n: jnp.where(active, n, o), caches, c2),
+            "ng": jnp.where(active, ng2, ng),
+            "ctx": jnp.where(active, ctx2, ctx)}
+        return (pool_f, jnp.where(active, p2, pos),
+                jnp.where(active, k2, key), emitted,
+                jnp.where(active, jnp.int32(L), 0))
 
     return jax.jit(jax.vmap(one_slot,
                             in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0)),
@@ -120,7 +239,8 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, max_len: int = 128,
                  slots: int = 4, prefill_chunk: int = 16,
                  decode_chunk: int = 4, engine: Optional[Engine] = None,
-                 seed: int = 0, compact_decode: bool = False):
+                 seed: int = 0, compact_decode: bool = False,
+                 spec_decode: bool = False, pool_id: int = 0):
         self.cfg = cfg
         self.params = params
         self.engine = engine or Engine()
@@ -136,16 +256,33 @@ class ServeEngine:
         # so it is gated on the pool being at least half idle.
         self.compact_decode = compact_decode
         self.compact_ticks = 0
+        # speculative in-tick decoding (see module docstring): offers the
+        # engine a third tick arm — n-gram draft + chunk-scan verify — whose
+        # use is decided per tick from measured acceptance/runtime EMAs.
+        # ``pool_id`` namespaces this pool's acceptance EMA when several
+        # ServeEngines share one Engine.
+        self.spec_decode = spec_decode
+        self.pool_id = pool_id
+        self.spec_ticks = 0
+        self.spec_proposed = 0      # draft tokens offered for verification
+        self.spec_accepted = 0      # draft tokens committed
         one = lm.init_cache(cfg, 1, max_len)
-        self.pool = jax.tree.map(
-            lambda x: jnp.zeros((slots,) + x.shape, x.dtype), one["caches"])
+        self.pool = {
+            "caches": jax.tree.map(
+                lambda x: jnp.zeros((slots,) + x.shape, x.dtype),
+                one["caches"]),
+            # per-slot n-gram suffix table + its context window: part of the
+            # donated pool so draft proposal never leaves the device
+            "ng": jnp.zeros((slots, cfg.serve.spec_table), jnp.int32),
+            "ctx": jnp.zeros((slots, cfg.serve.spec_ctx), jnp.int32),
+        }
         self.pos = jnp.zeros((slots,), jnp.int32)
         self.pos_host = np.zeros((slots,), np.int64)   # device-sync-free view
         self._reset = np.zeros((slots,), bool)         # zero these rows in-jit
         self._base_key = jax.random.PRNGKey(seed)
         self.keys = jax.random.split(self._base_key, slots)
         self._tick = build_slot_tick(cfg)
-        self._compiled: set = set()    # (tick_len, rows) pairs already jitted
+        self._compiled: set = set()    # (spec, tick_len, rows) already jitted
         self.queue: Deque[Request] = deque()
         self.active: List[Optional[Request]] = [None] * slots
         self.tick_no = 0
@@ -161,8 +298,9 @@ class ServeEngine:
         and the request id."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size >= 1, "empty prompt"
-        need = prompt.size + max_new + max(self.prefill_chunk,
-                                           self.decode_chunk)
+        need = prompt.size + max_new + max(
+            self.prefill_chunk, self.decode_chunk,
+            self.cfg.serve.spec_len if self.spec_decode else 0)
         assert need <= self.max_len, \
             f"prompt+max_new+chunk={need} exceeds max_len={self.max_len}"
         rid = next(self._rid)
@@ -204,6 +342,10 @@ class ServeEngine:
         info = {"tick": self.tick_no, "queue_depth": len(self.queue),
                 "tokens_out": self.tokens_out,
                 "paused": self.engine.controller.paused,
+                "spec": {"enabled": self.spec_decode,
+                         "ticks": self.spec_ticks,
+                         "proposed": self.spec_proposed,
+                         "accepted": self.spec_accepted},
                 "slots": [None if r is None else
                           {"rid": r.rid, "prompt_off": r.prompt_off,
                            "plen": len(r.prompt), "out": len(r.tokens),
@@ -219,6 +361,8 @@ class ServeEngine:
             self.decode_chunk = int(updates["decode_chunk"])
         if "prefill_chunk" in updates:
             self.prefill_chunk = int(updates["prefill_chunk"])
+        if "spec_decode" in updates:
+            self.spec_decode = bool(updates["spec_decode"])
 
     def _poll(self) -> bool:
         r = self.engine.poll(self.tick_no, 0, self._inspect)
@@ -240,6 +384,30 @@ class ServeEngine:
                 self.engine.global_bps.remove(bp)
 
     # ----------------------------------------------------------------- tick
+    def _tick_len(self, act: List[Request], mode: str, chunk: int) -> int:
+        """Adaptive tick length: no slot needs more than its remaining
+        horizon, so trim the chunk to the longest one (rounded up to a
+        power of two — the tick jit specializes on L, and an arbitrary L
+        would compile once per distinct tail length).  ``cap`` keeps the
+        tick inside the tightest participant's cache headroom: submit()
+        reserves a chunk of slack, but a hot chunk-size update could
+        otherwise leave a near-full slot unable to ever run again."""
+        need, cap = 1, chunk
+        for r in act:
+            if mode != "prefill" and r.prefilling:
+                continue
+            h = (len(r.prompt) - r.prompt_off) if r.prefilling \
+                else (r.max_new - len(r.tokens))
+            need = max(need, min(h, chunk))
+            cap = min(cap, self.max_len - int(self.pos_host[r.slot]))
+        L = 1
+        while L < need:
+            L *= 2
+        L = min(L, chunk)
+        while L > max(cap, 1):
+            L //= 2
+        return L
+
     def tick(self) -> bool:
         """One engine iteration.  Returns False when stopped, True otherwise
         (including idle ticks).  Control messages land here — between ticks
@@ -255,37 +423,31 @@ class ServeEngine:
         n_dec = len(act) - n_pre
         pre_toks = sum(len(r.prompt) - r.prompt_off
                        for r in act if r.prefilling)
+        # the speculative arm is only offered when every decode participant
+        # is greedy: verifying sampled continuations greedily would change
+        # their distribution (module docstring)
+        spec_len = self.cfg.serve.spec_len
+        spec_ok = (self.spec_decode and spec_len > 1 and n_dec > 0
+                   and all(r.temperature <= 0
+                           for r in act if not r.prefilling))
         mode = self.engine.choose_serve_tick(
-            n_dec, n_pre, pre_toks, self.decode_chunk, self.prefill_chunk)
-        chunk = self.prefill_chunk if mode == "prefill" else self.decode_chunk
-        # adaptive tick length: no slot needs more than its remaining
-        # horizon, so trim the chunk to the longest one (rounded up to a
-        # power of two — the tick jit specializes on L, and an arbitrary L
-        # would compile once per distinct tail length).  ``cap`` keeps the
-        # tick inside the tightest participant's cache headroom: submit()
-        # reserves a chunk of slack, but a hot chunk-size update could
-        # otherwise leave a near-full slot unable to ever run again.
-        need, cap = 1, chunk
-        for r in act:
-            if mode == "decode" and r.prefilling:
-                continue
-            h = (len(r.prompt) - r.prompt_off) if r.prefilling \
-                else (r.max_new - len(r.tokens))
-            need = max(need, min(h, chunk))
-            cap = min(cap, self.max_len - int(self.pos_host[r.slot]))
-        L = 1
-        while L < need:
-            L *= 2
-        L = min(L, chunk)
-        while L > max(cap, 1):
-            L //= 2
+            n_dec, n_pre, pre_toks, self.decode_chunk, self.prefill_chunk,
+            spec_len=spec_len if spec_ok else 0, pool_id=self.pool_id)
+        if mode == "spec":
+            L = self._tick_len(act, mode, spec_len)
+            if L < 2:
+                mode = "decode"      # a 1-token tick has nothing to draft
+        if mode != "spec":
+            chunk = (self.prefill_chunk if mode == "prefill"
+                     else self.decode_chunk)
+            L = self._tick_len(act, mode, chunk)
         toks = np.zeros((self.slots, L), np.int32)
         n_given = np.ones((self.slots,), np.int32)
         active = np.zeros((self.slots,), bool)
         temps = np.zeros((self.slots,), np.float32)
         part: List[Request] = []
         for r in act:
-            if mode == "decode" and r.prefilling:
+            if mode != "prefill" and r.prefilling:
                 continue                      # prefill slots sit this one out
             if int(self.pos_host[r.slot]) + L > self.max_len:
                 continue                      # defensive: never overrun cache
@@ -308,7 +470,7 @@ class ServeEngine:
         # unchanged — and the scatter-back touches only gathered rows, so
         # sat-out slots keep their pending reset flags and cache state.
         part_slots = [r.slot for r in part]
-        compact = (self.compact_decode and mode == "decode"
+        compact = (self.compact_decode and mode != "prefill"
                    and len(part) <= self.slots // 2)
         if compact:
             nc = 1
@@ -319,15 +481,21 @@ class ServeEngine:
         else:
             idx = np.arange(self.slots, dtype=np.int32)
         rows = len(idx)
-        cold = (L, rows) not in self._compiled  # fresh jit specialization:
-        self._compiled.add((L, rows))           # keep compiles out of the EMA
-        job = Job("serve_" + ("prefill" if mode == "prefill" else "decode"),
-                  tokens=L * len(part), meta={"cold": cold})
+        spec = mode == "spec"
+        cold = (spec, L, rows) not in self._compiled  # fresh specialization:
+        self._compiled.add((spec, L, rows))       # keep compiles out of EMAs
+        kind = {"prefill": "serve_prefill", "decode": "serve_decode",
+                "spec": "serve_spec_decode"}[mode]
+        job = Job(kind, tokens=L * len(part), meta={"cold": cold})
+        # build_slot_tick memoizes per (cfg, spec_len), so this lookup is a
+        # cache hit after the first speculative tick
+        fn = build_slot_tick(self.cfg, self.cfg.serve.spec_len) if spec \
+            else self._tick
         if compact:
             jidx = jnp.asarray(idx)
             pool_c = jax.tree.map(lambda c: c[jidx], self.pool)
-            pool_n, pos_n, keys_n, emitted = self.engine.run_job(
-                job, lambda: jax.block_until_ready(self._tick(
+            pool_n, pos_n, keys_n, emitted, nvalid = self.engine.run_job(
+                job, lambda: jax.block_until_ready(fn(
                     self.params, pool_c, self.pos[jidx],
                     jnp.asarray(toks[idx]), jnp.asarray(n_given[idx]),
                     jnp.asarray(active[idx]), jnp.asarray(self._reset[idx]),
@@ -340,17 +508,23 @@ class ServeEngine:
             em_rows = np.asarray(emitted)
             em = np.zeros((self.slots, L), em_rows.dtype)
             em[idx] = em_rows
+            nv = np.zeros((self.slots,), np.int64)
+            nv[idx] = np.asarray(nvalid)
             self.compact_ticks += 1
         else:
-            self.pool, self.pos, self.keys, emitted = self.engine.run_job(
-                job, lambda: jax.block_until_ready(self._tick(
-                    self.params, self.pool, self.pos, jnp.asarray(toks),
-                    jnp.asarray(n_given), jnp.asarray(active),
-                    jnp.asarray(self._reset), self.keys,
-                    jnp.asarray(temps))))
+            self.pool, self.pos, self.keys, emitted, nvalid = \
+                self.engine.run_job(
+                    job, lambda: jax.block_until_ready(fn(
+                        self.params, self.pool, self.pos, jnp.asarray(toks),
+                        jnp.asarray(n_given), jnp.asarray(active),
+                        jnp.asarray(self._reset), self.keys,
+                        jnp.asarray(temps))))
             self._reset[:] = False            # zeroing landed inside the jit
             em = np.asarray(emitted)
-        self.pos_host[active] += L
+            nv = np.asarray(nvalid).astype(np.int64)
+        # the tick reports how far each slot really advanced: L for every
+        # active slot on the plain arms, the committed prefix under spec
+        self.pos_host += nv
         n_new = 0
         for r in part:
             s, g = r.slot, int(n_given[r.slot])
@@ -359,13 +533,23 @@ class ServeEngine:
                 if r.prefilling:
                     continue                  # prompt continues next tick
             need = r.max_new - len(r.tokens)
-            outs = em[s, g - 1:][:need]
+            last = int(nv[s]) if spec else L
+            outs = em[s, g - 1:last][:need]
             r.tokens.extend(int(t) for t in outs)
             n_new += len(outs)
             if len(r.tokens) >= r.max_new:
                 self._evict(r)
             else:
-                r.pending_tok = int(em[s, L - 1])
+                r.pending_tok = int(em[s, last - 1])
+        if spec:
+            proposed = (L - 1) * len(part)
+            accepted = int(sum(int(nv[s]) - 1 for s in part_slots))
+            self.spec_ticks += 1
+            self.spec_proposed += proposed
+            self.spec_accepted += accepted
+            if proposed:
+                self.engine.observe_accept(self.pool_id,
+                                           accepted / proposed)
         self.tokens_out += n_new
         self._check_breakpoints(n_new)
         self.tick_no += 1

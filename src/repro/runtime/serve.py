@@ -54,13 +54,14 @@ class BatchedServer:
 
     def __init__(self, cfg: ArchConfig, params, max_len: int = 128,
                  slots: int = 4, prefill_chunk: int = 16,
-                 decode_chunk: int = 4):
+                 decode_chunk: int = 4, spec_decode: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.slots = slots
         self.prefill_chunk = prefill_chunk
         self.decode_chunk = decode_chunk
+        self.spec_decode = spec_decode
         self._step = None                # static-path jit, built on demand
         self._engine = None
 
@@ -70,7 +71,8 @@ class BatchedServer:
             self._engine = ServeEngine(
                 self.cfg, self.params, max_len=self.max_len,
                 slots=self.slots, prefill_chunk=self.prefill_chunk,
-                decode_chunk=self.decode_chunk, seed=seed)
+                decode_chunk=self.decode_chunk, seed=seed,
+                spec_decode=self.spec_decode)
         return self._engine
 
     def generate(self, prompts: np.ndarray, max_new: int = 16,

@@ -159,6 +159,31 @@ def test_durable_log_plan_roundtrip(tmp_path):
             for m in r["plan"]["migrations"]] == [(0, 1, 3), (0, 2, 6)]
 
 
+def test_durable_log_breakpoint_roundtrip(tmp_path):
+    """Breakpoint registrations are durably logged: a GlobalCountBreakpoint
+    (plain dataclass) restores as the class with its counter state; a
+    LocalBreakpoint's lambda predicate cannot be serialized and takes the
+    tagged-repr path without killing poll."""
+    import warnings
+    path = str(tmp_path / "control.log")
+    ctl = Controller()
+    ctl.attach_durable_log(path)
+    ctl.send(M.set_breakpoint(GlobalCountBreakpoint("tok", "tokens",
+                                                    target=64.0)))
+    ctl.send(M.set_breakpoint(LocalBreakpoint("nan",
+                                              lambda m: m["loss"] != 0)))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ctl.poll(step=1, microbatch=0)            # must not raise
+    assert any("durable log" in str(x.message) for x in w)
+    recs = Controller.read_durable_log(path)
+    assert [r.kind for r in recs] == ["breakpoint", "breakpoint"]
+    bp = recs[0].payload
+    assert isinstance(bp, GlobalCountBreakpoint)
+    assert bp.metric == "tokens" and bp.target == 64.0 and bp._total == 0.0
+    assert "__unserializable__" in recs[1].payload
+
+
 def test_durable_log_unserializable_payload_keeps_worker_alive(tmp_path):
     """A payload _json_safe cannot model must neither kill poll() nor
     vanish: it is logged as a tagged repr with a warning."""

@@ -110,6 +110,73 @@ def test_choose_step_path_follows_measured_costs():
         eng.decisions[-1]["scores"]["fused"]
 
 
+def test_costbook_observe_rate_clamps_to_unit_interval():
+    cb = CostBook()
+    cb.observe_rate("acc", 1.7)
+    assert cb.estimate("acc") == 1.0
+    for _ in range(30):
+        cb.observe_rate("acc", -3.0)
+    assert cb.estimate("acc") >= 0.0
+
+
+def test_serve_decode_workflow_commit_cardinality_tracks_acceptance():
+    """The spec arm's sink cardinality is the expected committed-token
+    count; the verify region's time is paid regardless — the speculative
+    gamble the arm decision prices."""
+    from repro.engine import serve_decode_workflow
+    from repro.core.scheduler import cardinalities
+    cm = CostModel()
+    wf_hi = serve_decode_workflow("spec", 2, 4, 1e-4, accept=1.0)
+    wf_lo = serve_decode_workflow("spec", 2, 4, 1e-4, accept=0.0)
+    assert cardinalities(wf_hi)["stream_out"] == pytest.approx(2 * 4)
+    assert cardinalities(wf_lo)["stream_out"] == pytest.approx(2 * 1)
+    # same verify work either way
+    assert completion_time(wf_hi, cm) == pytest.approx(
+        completion_time(wf_lo, cm))
+
+
+def test_choose_serve_tick_spec_arm_switches_on_measured_acceptance():
+    """The acceptance-criteria test: with measured runtimes fixed, driving
+    the pool's acceptance-rate EMA high vs low flips the decode arm."""
+    eng = Engine()
+    # fresh engine explores the speculative arm first: acceptance can only
+    # be measured by running it
+    assert eng.choose_serve_tick(2, 0, 0, 4, 16, spec_len=4) == "spec"
+    # measured: the verify step is a bit cheaper per scan step than the
+    # sampling decode step (first observation per kind is warm-up-skipped)
+    for _ in range(3):
+        eng.observe(Job("serve_decode", tokens=100), 1.0e-2)
+        eng.observe(Job("serve_spec_decode", tokens=100), 0.8e-2)
+    for _ in range(4):
+        eng.observe_accept(0, 0.9)
+    assert eng.choose_serve_tick(2, 0, 0, 4, 16, spec_len=4) == "spec"
+    assert eng.decisions[-1]["scores"]["spec"] < \
+        eng.decisions[-1]["scores"]["decode"]
+    # an incompressible workload drives acceptance to ~0: the expected
+    # commits collapse to 1 per tick and the plain arm wins back
+    for _ in range(12):
+        eng.observe_accept(0, 0.0)
+    assert eng.choose_serve_tick(2, 0, 0, 4, 16, spec_len=4) == "decode"
+    assert eng.decisions[-1]["scores"]["decode"] < \
+        eng.decisions[-1]["scores"]["spec"]
+    # no speculative offer -> plain decode, regardless of EMAs
+    assert eng.choose_serve_tick(2, 0, 0, 4, 16, spec_len=0) == "decode"
+
+
+def test_choose_serve_tick_spec_arm_reexplores_loser():
+    eng = Engine()
+    for _ in range(3):
+        eng.observe(Job("serve_decode", tokens=100), 1.0e-2)
+        eng.observe(Job("serve_spec_decode", tokens=100), 1.0e-2)
+    for _ in range(8):
+        eng.observe_accept(0, 0.0)        # spec is the losing arm
+    picks = [eng.choose_serve_tick(2, 0, 0, 4, 16, spec_len=4)
+             for _ in range(16)]
+    assert picks[:15] == ["decode"] * 15
+    assert picks[15] == "spec"            # every 16th round re-explores
+    assert eng.decisions[-1]["why"] == "re-explore"
+
+
 def test_choose_serve_tick_aging_bounds_prefill_starvation():
     eng = Engine(max_prefill_defer=3)
     picks = [eng.choose_serve_tick(decode_slots=2, prefill_slots=1,

@@ -5,13 +5,16 @@ import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis import given, seed, settings, strategies as st  # noqa: E402
+
+from conftest import PYTEST_SEED  # noqa: E402
 
 from repro.core.estimator import MeanModelEstimator
 from repro.core.skew import SkewParams, detect
 from repro.core.transfer import PartitionLogic, sbr_apply, sbr_fraction
 
 
+@seed(PYTEST_SEED)
 @settings(max_examples=50, deadline=None)
 @given(st.dictionaries(st.integers(0, 15),
                        st.floats(0, 1e6, allow_nan=False), min_size=2),
@@ -25,6 +28,7 @@ def test_detect_invariants(loads, eta, tau):
         assert loads[s] - loads[h] >= tau            # eq (3.1),(3.2)
 
 
+@seed(PYTEST_SEED)
 @settings(max_examples=50, deadline=None)
 @given(st.floats(0.001, 1e6), st.floats(0, 1e6))
 def test_sbr_fraction_bounds_and_balance(phi_s, phi_h):
@@ -38,6 +42,7 @@ def test_sbr_fraction_bounds_and_balance(phi_s, phi_h):
             assert abs(s_after - h_after) < 1e-6 * max(phi_s, 1.0)
 
 
+@seed(PYTEST_SEED)
 @settings(max_examples=30, deadline=None)
 @given(st.integers(2, 6), st.integers(2, 20),
        st.floats(0.05, 0.95))
@@ -51,6 +56,7 @@ def test_partition_logic_route_distribution(n_workers, n_keys, frac):
             assert abs(hits / 1000.0 - frac) < 0.01
 
 
+@seed(PYTEST_SEED)
 @settings(max_examples=30, deadline=None)
 @given(st.lists(st.floats(1, 1e4), min_size=2, max_size=50))
 def test_estimator_eps_decreases_with_n(xs):
@@ -62,6 +68,7 @@ def test_estimator_eps_decreases_with_n(xs):
     assert eps == 0.0 or eps < 1e-9
 
 
+@seed(PYTEST_SEED)
 @settings(max_examples=25, deadline=None)
 @given(st.integers(1, 64), st.integers(2, 8), st.integers(1, 4))
 def test_dispatch_every_kept_token_appears_once(t, e, k):
@@ -88,6 +95,7 @@ def test_dispatch_every_kept_token_appears_once(t, e, k):
     assert int(np.asarray(m["kept_counts"]).max()) <= cap
 
 
+@seed(PYTEST_SEED)
 @settings(max_examples=20, deadline=None)
 @given(st.integers(8, 64), st.integers(2, 8))
 def test_dispatch_capacity_respected(t, e):
@@ -103,6 +111,7 @@ def test_dispatch_capacity_respected(t, e):
     assert int(m["dropped"]) == t - cap
 
 
+@seed(PYTEST_SEED)
 @settings(max_examples=20, deadline=None)
 @given(st.integers(2, 5), st.integers(0, 3))
 def test_region_graph_partition_invariant(n_chain, n_blocking):

@@ -117,6 +117,105 @@ def test_serve_pause_inspect_resume_between_ticks_keeps_tokens():
     assert kinds.count("pause") == 1 and kinds.count("resume") == 1
 
 
+def test_serve_durable_log_replay_of_control_messages(tmp_path):
+    """Serve-side pause/update/breakpoint/resume delivered mid-generation
+    are durably logged at their tick position; after a 'crash', a
+    ReplayingController re-applies the state-effecting records at their
+    recorded ticks on a fresh ServeEngine and the regenerated outputs are
+    bit-identical — §2.6.2 recovery, which PR 2 gave training
+    (test_controller_ft), now exercised on the serving control plane."""
+    from repro.core.breakpoints import GlobalCountBreakpoint
+    from repro.core.controller import Controller, ReplayingController
+    from repro.engine import Engine
+
+    cfg = get_arch("gemma3-1b-smoke")
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(17)
+    prompts = rng.integers(1, cfg.vocab, (3, 7)).astype(np.int32)
+    path = str(tmp_path / "serve_control.log")
+
+    eng = _mk_engine(cfg, params, engine=Engine(durable_log=path))
+    ctl = eng.engine.controller
+    reqs = [eng.submit(p, max_new=10) for p in prompts]
+    for _ in range(2):
+        eng.tick()
+    ctl.send(M.pause())
+    ctl.send(M.update(max_prefill_defer=6, decode_chunk=2))
+    ctl.send(M.set_breakpoint(
+        GlobalCountBreakpoint("budget", "emitted", target=10**9)))
+    ctl.send(M.resume())
+    eng.run_until_done()
+    ref = np.stack([r.output() for r in reqs])
+    del eng                                       # "crash"
+
+    records = Controller.read_durable_log(path)
+    assert [r.kind for r in records] == ["pause", "update", "breakpoint",
+                                         "resume"]
+    assert all(r.step == 2 for r in records)      # tick 2's poll point
+    bp = records[2].payload
+    assert isinstance(bp, GlobalCountBreakpoint)  # restored as the class,
+    assert bp.target == 10**9                     # not a field dict
+
+    rc = ReplayingController(records)
+    eng2 = _mk_engine(cfg, params, engine=Engine(controller=rc))
+    reqs2 = [eng2.submit(p, max_new=10) for p in prompts]
+    eng2.run_until_done()
+    np.testing.assert_array_equal(np.stack([r.output() for r in reqs2]), ref)
+    # the replayed state effects landed at their recorded tick
+    assert eng2.engine.max_prefill_defer == 6
+    assert eng2.decode_chunk == 2
+    assert any(getattr(b, "name", "") == "budget"
+               for b in eng2.engine.global_bps)
+
+
+def test_serve_durable_log_replay_with_firing_breakpoint(tmp_path):
+    """A global token-budget breakpoint that FIRES mid-generation (pausing
+    the stream) must replay cleanly: the recovered engine re-registers it
+    from the log, it fires again at the same budget, and the regenerated
+    tokens are bit-identical."""
+    from repro.core.breakpoints import GlobalCountBreakpoint
+    from repro.core.controller import Controller, ReplayingController
+    from repro.engine import Engine
+
+    cfg = get_arch("gemma3-1b-smoke")
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    prompt = np.arange(1, 7, dtype=np.int32)
+
+    def run(eng):
+        req = eng.submit(prompt, max_new=12)
+        resumer = threading.Thread(target=lambda: (
+            _wait_paused(eng), eng.engine.controller.send(M.resume())))
+        resumer.start()
+        eng.run_until_done()
+        resumer.join()
+        return req.output()
+
+    def _wait_paused(eng):
+        while not eng.engine.controller.paused:
+            time.sleep(0.01)
+
+    path = str(tmp_path / "bp.log")
+    eng = _mk_engine(cfg, params, engine=Engine(durable_log=path),
+                     decode_chunk=2)
+    eng.engine.controller.send(M.set_breakpoint(
+        GlobalCountBreakpoint("tok-budget", "emitted", target=4)))
+    ref = run(eng)
+    assert "tok-budget" in eng.hit_breakpoints
+    del eng
+
+    records = Controller.read_durable_log(path)
+    kinds = [r.kind for r in records]
+    assert "breakpoint" in kinds and "resume" in kinds
+    # replay: _total must restore to its logged (pre-fire) value so the
+    # budget fires at the same point in the regenerated stream
+    eng2 = _mk_engine(cfg, params,
+                      engine=Engine(controller=ReplayingController(records)),
+                      decode_chunk=2)
+    got = run(eng2)
+    assert "tok-budget" in eng2.hit_breakpoints
+    np.testing.assert_array_equal(got, ref)
+
+
 def test_serve_pause_latency_is_tick_bounded():
     """An async pause lands at the next tick boundary, and the engine keeps
     answering inspect while paused (the §2.4.4 capability, now on serving)."""

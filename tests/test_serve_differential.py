@@ -1,0 +1,208 @@
+"""Differential serve-equivalence harness.
+
+The hand-picked equivalence tests in test_engine.py / test_serve_consistency
+pin a few (pool, chunk, prompt) shapes; this harness sweeps the scenario
+space — random prompt lengths and response budgets, pool sizes, chunk sizes,
+join/evict pressure (more requests than slots), control-message
+interleavings delivered between ticks, and hot config updates — and asserts
+that ``ServeEngine`` greedy outputs are **bit-identical** to the static
+``BatchedServer.generate_static`` oracle across ``compact_decode`` ×
+``spec_decode``.  Speculative decode makes this the load-bearing test: its
+acceptance mask must commit exactly the tokens plain greedy decode would
+have produced, under every join/evict/control interleaving.
+
+Two layers share one scenario generator (seeded from ``PYTEST_SEED``):
+
+* ``test_differential_seeded`` — a fixed number of generated scenarios,
+  pure numpy, always runs (tier-1 keeps coverage even where hypothesis is
+  not installed); a wider batch rides the ``slow`` mark.
+* ``test_differential_hypothesis`` — the same runner driven by hypothesis
+  strategies (shrinking!), ``fast`` profile in the tier-1 CI job, widened
+  by ``HYPOTHESIS_PROFILE=slow`` in the slow job.
+"""
+from functools import lru_cache
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_arch
+from repro.core import messages as M
+from repro.engine.serve import ServeEngine
+from repro.models import lm
+from repro.runtime.serve import BatchedServer
+
+from conftest import PYTEST_SEED
+
+CFG = get_arch("gemma3-1b-smoke")
+MAX_LEN = 64
+# bounded dims keep the tick-jit specialization count (and thus compile
+# time) shared and small across the whole sweep; build_slot_tick memoizes
+# per config, so every scenario reuses the same compiled ticks
+SLOTS = (1, 2, 3)
+PREFILL_CHUNKS = (1, 2, 4, 8)
+DECODE_CHUNKS = (1, 2, 4)
+CTL_KINDS = ("pause_batch", "update_chunks", "toggle_spec")
+
+
+@lru_cache(maxsize=None)
+def _fixture():
+    params = lm.init(CFG, jax.random.PRNGKey(0))
+    return params, BatchedServer(CFG, params, max_len=MAX_LEN)
+
+
+_ORACLE = {}
+
+
+def oracle(prompt, max_new):
+    """Static-loop greedy reference, memoized — repeated scenarios hit the
+    same prompts and the static path costs one dispatch per token."""
+    key = (tuple(int(t) for t in prompt), int(max_new))
+    if key not in _ORACLE:
+        _, srv = _fixture()
+        _ORACLE[key] = srv.generate_static(
+            np.asarray(prompt, np.int32)[None], max_new=int(max_new))[0]
+    return _ORACLE[key]
+
+
+def _ctl_batch(ctl, kind, rng):
+    """Deliver one control batch into the mailbox.  A pause is always
+    accompanied by a resume in the same batch — the engine's poll blocks
+    while paused, so an unpaired pause would deadlock the single-threaded
+    driver (the threaded pause path is covered in test_serve_consistency)."""
+    if kind == "pause_batch":
+        ctl.send(M.pause())
+        ctl.send(M.inspect())
+        ctl.send(M.update(max_prefill_defer=int(rng.integers(1, 8))))
+        ctl.send(M.resume())
+    elif kind == "update_chunks":
+        ctl.send(M.update(decode_chunk=int(rng.choice(DECODE_CHUNKS)),
+                          prefill_chunk=int(rng.choice(PREFILL_CHUNKS))))
+    elif kind == "toggle_spec":
+        ctl.send(M.update(spec_decode=bool(rng.integers(2))))
+
+
+def gen_scenario(rng):
+    n_req = int(rng.integers(1, 6))
+    return {
+        "prompts": [rng.integers(1, CFG.vocab,
+                                 int(rng.integers(1, 13))).astype(np.int32)
+                    for _ in range(n_req)],
+        "max_news": [int(rng.integers(1, 9)) for _ in range(n_req)],
+        "slots": int(rng.choice(SLOTS)),
+        "prefill_chunk": int(rng.choice(PREFILL_CHUNKS)),
+        "decode_chunk": int(rng.choice(DECODE_CHUNKS)),
+        "compact": bool(rng.integers(2)),
+        "spec": bool(rng.integers(2)),
+        # 0..2 control batches at distinct tick indices
+        "schedule": {int(t): str(rng.choice(CTL_KINDS))
+                     for t in rng.choice(7, size=int(rng.integers(0, 3)),
+                                         replace=False)},
+        "ctl_seed": int(rng.integers(0, 2**31)),
+    }
+
+
+def run_scenario(sc):
+    params, _ = _fixture()
+    eng = ServeEngine(CFG, params, max_len=MAX_LEN, slots=sc["slots"],
+                      prefill_chunk=sc["prefill_chunk"],
+                      decode_chunk=sc["decode_chunk"],
+                      compact_decode=sc["compact"],
+                      spec_decode=sc["spec"])
+    reqs = [eng.submit(p, max_new=n)
+            for p, n in zip(sc["prompts"], sc["max_news"])]
+    ctl_rng = np.random.default_rng(sc["ctl_seed"])
+    ticks = 0
+    while eng.queue or any(r is not None for r in eng.active):
+        if ticks in sc["schedule"]:
+            _ctl_batch(eng.engine.controller, sc["schedule"][ticks], ctl_rng)
+        assert eng.tick(), "engine stopped unexpectedly"
+        ticks += 1
+        assert ticks < 1000, "serve engine did not drain"
+    for i, (p, n, r) in enumerate(zip(sc["prompts"], sc["max_news"], reqs)):
+        assert r.done.is_set()
+        np.testing.assert_array_equal(
+            r.output(), oracle(p, n),
+            err_msg=(f"req {i}: plen={len(p)} max_new={n} slots={sc['slots']}"
+                     f" pc={sc['prefill_chunk']} dc={sc['decode_chunk']}"
+                     f" compact={sc['compact']} spec={sc['spec']}"
+                     f" schedule={sc['schedule']}"))
+    return eng
+
+
+# ------------------------------------------------------- always-on seeded sweep
+
+@pytest.mark.parametrize("case", range(4))
+def test_differential_seeded(case):
+    run_scenario(gen_scenario(np.random.default_rng(PYTEST_SEED * 1009 + case)))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", range(4, 20))
+def test_differential_seeded_big(case):
+    run_scenario(gen_scenario(np.random.default_rng(PYTEST_SEED * 1009 + case)))
+
+
+def test_differential_spec_forced_arm():
+    """Pin the speculative arm on for every decode tick (bypassing the
+    engine's cost decision) so multi-token accepted commits are exercised
+    regardless of what the CostBook would choose on this machine."""
+    params, _ = _fixture()
+    rng = np.random.default_rng(PYTEST_SEED + 77)
+    eng = ServeEngine(CFG, params, max_len=MAX_LEN, slots=2,
+                      prefill_chunk=4, decode_chunk=2, spec_decode=True)
+    orig = eng.engine.choose_serve_tick
+
+    def force_spec(*a, **k):
+        mode = orig(*a, **k)
+        return "spec" if mode == "decode" and k.get("spec_len", 0) > 1 \
+            else mode
+
+    eng.engine.choose_serve_tick = force_spec
+    prompts = [rng.integers(1, CFG.vocab, (l,)).astype(np.int32)
+               for l in (3, 9, 5)]
+    reqs = [eng.submit(p, max_new=16) for p in prompts]
+    eng.run_until_done()
+    assert eng.spec_ticks > 0 and eng.spec_proposed > 0
+    for p, r in zip(prompts, reqs):
+        np.testing.assert_array_equal(r.output(), oracle(p, 16),
+                                      err_msg=f"plen={len(p)}")
+
+
+# --------------------------------------------------- hypothesis-driven sweep
+
+try:
+    from hypothesis import given, seed, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs the dev deps
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @seed(PYTEST_SEED)
+    @settings(print_blob=True)
+    @given(data=st.data())
+    def test_differential_hypothesis(data):
+        n_req = data.draw(st.integers(1, 5), label="n_req")
+        sc = {
+            "prompts": [np.asarray(
+                data.draw(st.lists(st.integers(1, CFG.vocab - 1),
+                                   min_size=1, max_size=12),
+                          label=f"prompt_{i}"), np.int32)
+                for i in range(n_req)],
+            "max_news": [data.draw(st.integers(1, 8), label=f"max_new_{i}")
+                         for i in range(n_req)],
+            "slots": data.draw(st.sampled_from(SLOTS), label="slots"),
+            "prefill_chunk": data.draw(st.sampled_from(PREFILL_CHUNKS),
+                                       label="prefill_chunk"),
+            "decode_chunk": data.draw(st.sampled_from(DECODE_CHUNKS),
+                                      label="decode_chunk"),
+            "compact": data.draw(st.booleans(), label="compact"),
+            "spec": data.draw(st.booleans(), label="spec"),
+            "schedule": data.draw(
+                st.dictionaries(st.integers(0, 6),
+                                st.sampled_from(CTL_KINDS), max_size=2),
+                label="schedule"),
+            "ctl_seed": data.draw(st.integers(0, 2**31 - 1),
+                                  label="ctl_seed"),
+        }
+        run_scenario(sc)
