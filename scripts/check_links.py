@@ -1,0 +1,64 @@
+"""Fail CI on broken intra-repo links in the documentation layer.
+
+Scans the markdown files that make up the documentation surface (top-level
+README.md, docs/, and the per-package READMEs), extracts every
+``[text](target)`` link, and verifies that relative (or repo-rooted)
+targets resolve to a real file or directory in the repo.  External links
+(http/https/mailto) and pure anchors are skipped — this is an offline
+check; CI must not flake on the network.
+
+  python scripts/check_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+DOC_GLOBS = ("README.md", "docs/**/*.md", "src/repro/engine/README.md",
+             "src/repro/kernels/README.md")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files(root: Path):
+    for pattern in DOC_GLOBS:
+        yield from sorted(root.glob(pattern))
+
+
+def check_file(root: Path, md: Path) -> list:
+    errors = []
+    for m in LINK_RE.finditer(md.read_text(encoding="utf-8")):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0]          # strip anchors
+        if not path:
+            continue
+        # a leading "/" means repo-rooted, not filesystem-rooted (pathlib's
+        # "/" operator would discard root for an absolute right operand)
+        resolved = (root / path.lstrip("/")) if path.startswith("/") \
+            else (md.parent / path)
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(root)}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
+    root = root.resolve()
+    files = list(doc_files(root))
+    if not files:
+        print("check_links: no documentation files found", file=sys.stderr)
+        return 1
+    errors = []
+    for md in files:
+        errors.extend(check_file(root, md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -44,6 +44,24 @@ class MoECfg:
 
 
 @dataclasses.dataclass(frozen=True)
+class PriorityClass:
+    """One serve traffic class in the weighted-FRT objective.
+
+    ``weight`` scales the class's claim on first-response time: the engine
+    scores each candidate tick as FRT divided by the summed weight of the
+    requests the tick advances, so a weight-4 class wins the arbitration
+    against a weight-1 class whenever their raw FRTs are within 4x of each
+    other.  ``max_defer`` is the class's aging bound — the maximum number of
+    scheduled ticks an *admitted* prefill of this class may sit out before
+    the engine is forced to run its prefill, whatever the weighted scores
+    say.  Starvation of a low-weight class is therefore bounded by
+    construction (regression-tested in tests/test_serve_priority.py)."""
+    name: str = "default"
+    weight: float = 1.0
+    max_defer: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeCfg:
     """Serve-side engine knobs (ServeEngine).
 
@@ -54,7 +72,13 @@ class ServeCfg:
     accepted prefix, so greedy outputs stay bit-identical to plain decode.
     Whether a tick runs the speculative or the plain arm is an *engine*
     decision made from the measured per-pool acceptance-rate EMA
-    (``Engine.choose_serve_tick``)."""
+    (``Engine.choose_serve_tick``).
+
+    Priority classes: requests carry a ``priority`` naming one entry of
+    ``classes``; the engine arbitrates candidate ticks across every slot
+    pool under weighted FRT with per-class aging bounds (see
+    :class:`PriorityClass`).  The default single-entry table reproduces the
+    pre-priority scheduler exactly."""
     # max tokens proposed+verified per speculative tick (the verify-scan
     # length); <= 1 disables the speculative arm entirely.
     spec_len: int = 4
@@ -63,6 +87,9 @@ class ServeCfg:
     spec_table: int = 512
     # n-gram context length (tokens hashed to index the table).
     spec_ctx: int = 2
+    # priority traffic classes, in declaration order; the FIRST entry is the
+    # default class for requests submitted without an explicit priority.
+    classes: Tuple[PriorityClass, ...] = (PriorityClass(),)
 
 
 @dataclasses.dataclass(frozen=True)

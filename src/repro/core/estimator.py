@@ -88,6 +88,22 @@ class CostBook:
             return default
         return float(est.value)
 
+    def estimate_first(self, kinds, default: float | None = None):
+        """First measured estimate along a fallback chain of kinds.
+
+        The multi-pool serving engine keys tick runtimes per pool
+        (``serve_decode:p<id>_per_tok``) *and* globally (``serve_decode_per_tok``):
+        a pool that has run ticks is scored on its own measured speed — the
+        per-pool EMA is the scheduler's parallelism term, since a pool on
+        faster or more-parallel hardware simply shows a lower per-token time
+        — while a pool that has not run yet borrows the fleet-wide estimate
+        instead of a static prior."""
+        for kind in kinds:
+            v = self.estimate(kind)
+            if v is not None:
+                return v
+        return default
+
     def n_kinds(self) -> int:
         return len(self._est)
 

@@ -1,10 +1,22 @@
 """Result-aware choice selection (paper §4.5.2–4.5.4) + the ML mapping.
 
-First-response time (FRT) of a materialization choice: every region that must
-complete before the sink's region runs is paid in full; the sink's region
-contributes only its pipeline-fill latency (time to the FIRST tuple out of
-the sink, Figs 4.13–4.15).  Maestro picks the min-FRT choice, tie-breaking
-on materialized bytes (§4.6.3).
+Two scheduling objectives live here, and every online engine decision is a
+choice between them:
+
+* **First-response time (FRT)** — the *interactive* objective: time to the
+  FIRST tuple out of the sink.  Every region that must complete before the
+  sink's region runs is paid in full; the sink's region contributes only
+  its pipeline-fill latency (Figs 4.13–4.15).  Maestro picks the min-FRT
+  choice, tie-breaking on materialized bytes (§4.6.3).  This is the serve
+  objective: a user is waiting on the first token.
+* **Completion time** — the *throughput* objective: total time to drain
+  every region.  This is the train-step and kernel-choice objective:
+  nobody reads anything until the whole step lands.
+
+``weighted`` variants divide the score by a caller-supplied weight — the
+multi-pool serving engine scores each candidate tick as FRT over the summed
+priority-class weight of the requests the tick advances, which is how a
+high-priority class preempts a low-priority one without a separate queue.
 
 ML mapping (DESIGN.md §2): the same machinery selects the activation
 materialization (remat) policy of the training step — regions = {fwd, bwd,
@@ -114,17 +126,32 @@ def completion_time(wf: Workflow, cm: CostModel) -> float:
     return sum(region_full_time(wf, r, cards, cm) for r in regions(wf))
 
 
+def weighted_first_response_time(wf: Workflow, choice: FrozenSet[Edge],
+                                 cm: CostModel,
+                                 weight: float = 1.0) -> float:
+    """FRT scaled by urgency: candidates serving more (or heavier) waiting
+    requests score lower.  ``weight`` is the summed priority-class weight of
+    the requests whose first response the candidate advances; weight 1.0 is
+    plain FRT, so single-class scheduling falls out unchanged."""
+    return first_response_time(wf, choice, cm) / max(weight, 1e-9)
+
+
 def score_choices(wf: Workflow, cm: CostModel,
-                  objective: str = "frt") -> List[Tuple[float, float,
-                                                        FrozenSet[Edge]]]:
+                  objective: str = "frt",
+                  weight: float = 1.0) -> List[Tuple[float, float,
+                                                     FrozenSet[Edge]]]:
     """Online API: score every materialization choice under an objective
-    ('frt' or 'completion'); sorted best-first, tie-broken on bytes."""
+    ('frt' or 'completion'); sorted best-first, tie-broken on bytes.
+    ``weight`` divides the score (see ``weighted_first_response_time``) so
+    the same API arbitrates between workflows serving different aggregate
+    priority weights; the default leaves scores unweighted."""
     assert objective in ("frt", "completion"), objective
     scored = []
     for c in enumerate_choices(wf):
         t = first_response_time(wf, c, cm) if objective == "frt" \
             else completion_time(wf.materialize(c), cm)
-        scored.append((t, materialized_bytes(wf, c, cm), c))
+        scored.append((t / max(weight, 1e-9),
+                       materialized_bytes(wf, c, cm), c))
     scored.sort(key=lambda x: (x[0], x[1]))
     return scored
 

@@ -7,11 +7,14 @@ book + decisions), ``engine.jobs`` (the job -> region-workflow mapping), and
 ``runtime.serve`` are clients of this layer.
 """
 from repro.engine.engine import Engine
-from repro.engine.jobs import (Job, accept_kind, checkpoint_workflow,
+from repro.engine.jobs import (Job, TickCandidate, accept_kind,
+                               checkpoint_workflow, pool_kind,
                                serve_decode_workflow, serve_tick_workflow,
                                train_step_workflow)
-from repro.engine.serve import Request, ServeEngine, build_slot_tick
+from repro.engine.serve import (Request, ServeEngine, SlotPool,
+                                build_slot_tick)
 
-__all__ = ["Engine", "Job", "Request", "ServeEngine", "accept_kind",
-           "build_slot_tick", "checkpoint_workflow", "serve_decode_workflow",
+__all__ = ["Engine", "Job", "Request", "ServeEngine", "SlotPool",
+           "TickCandidate", "accept_kind", "build_slot_tick",
+           "checkpoint_workflow", "pool_kind", "serve_decode_workflow",
            "serve_tick_workflow", "train_step_workflow"]

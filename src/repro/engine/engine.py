@@ -21,6 +21,17 @@ against measured costs:
   splits into plain vs speculative k-token ticks, decided from the pool's
   measured acceptance-rate EMA — acceptance is exactly the kind of
   measured, result-aware signal the CostBook exists for.
+* ``choose_serve_job`` — the multi-pool generalization: N slot pools × K
+  priority classes offer candidate ticks (``jobs.TickCandidate``) and the
+  engine picks ONE (pool, composition) per round under weighted FRT —
+  each candidate's ``serve_tick_workflow`` is costed with the pool's own
+  measured per-token EMA (the parallelism term: a faster pool shows a
+  lower measured time) and its FRT is divided by the summed
+  priority-class weight of the requests it advances.  Per-class aging
+  bounds hard-override the scores: a candidate carrying a request past
+  its class's ``max_defer`` evicts every non-aged candidate from the
+  round, so low-priority prefills cannot starve under a saturating
+  high-priority stream.
 
 Workers (``TrainLoop``, ``ServeEngine``) are engine *clients*: they hand the
 engine their inspect callback and their job thunks and let it decide.
@@ -34,7 +45,8 @@ from repro.core.breakpoints import GlobalCountBreakpoint, LocalBreakpoint
 from repro.core.controller import Controller
 from repro.core.estimator import CostBook
 from repro.core.scheduler import (CostModel, completion_time,
-                                  first_response_time)
+                                  first_response_time,
+                                  weighted_first_response_time)
 from repro.engine import jobs as J
 
 
@@ -229,6 +241,60 @@ class Engine:
         self._prefill_defer = 0
         return self._decide("serve_tick", "prefill",
                             frt={"decode": frt_d, "prefill": frt_p})
+
+    def _pool_t_tok(self, pool_id: int) -> float:
+        """Per-token tick cost for one pool: the pool's own measured EMAs
+        first (``jobs.pool_kind`` — the weighted-FRT parallelism term), the
+        fleet-wide EMAs as bootstrap for a pool that has not ticked yet,
+        then the static prior."""
+        tick_kinds = ("serve_decode", "serve_spec_decode", "serve_prefill")
+        chain = [J.pool_kind(k, pool_id) + "_per_tok" for k in tick_kinds]
+        chain += [k + "_per_tok" for k in tick_kinds]
+        return self.costs.estimate_first(chain, 1e-3)
+
+    def choose_serve_job(self, cands: List[J.TickCandidate]
+                         ) -> tuple[int, str]:
+        """Pick the next tick across every slot pool: the Maestro decision
+        over ``jobs.serve_tick_workflow`` candidates under weighted FRT.
+
+        Each candidate is scored as the FRT of its tick workflow — costed
+        with the candidate pool's measured per-token EMA — divided by its
+        summed priority-class weight (``scheduler.weighted_first_response_time``),
+        and the minimum wins.  Aged candidates (a participant past its
+        class's ``max_defer``) pre-empt the scoring entirely: when any
+        exist, only they are scored, so the aging bound is a hard
+        guarantee, not a weight the arbitration could trade away.  A
+        winning decode candidate that offers the speculative arm then runs
+        the per-pool plain-vs-spec decision (``_choose_decode_arm``).
+
+        Returns ``(pool_id, mode)`` with mode one of
+        ``decode | prefill | spec``."""
+        assert cands, "choose_serve_job needs at least one candidate"
+        aged = [c for c in cands if c.aged]
+        if aged:
+            # several pools aged in the same round: the executor is serial,
+            # so serve the most-overdue bound first (ties fall through to
+            # the weighted scoring below)
+            worst = max(c.overdue for c in aged)
+            aged = [c for c in aged if c.overdue == worst]
+        pool_scores: Dict[str, float] = {}
+        best, best_score = None, float("inf")
+        for c in (aged or cands):
+            t_tok = self._pool_t_tok(c.pool_id)
+            chunk_now = min(c.pre_toks, c.chunk * max(c.n_pre, 1)) \
+                if c.mode == "prefill" else 0
+            wf = J.serve_tick_workflow(c.n_dec, c.chunk, chunk_now, t_tok)
+            s = weighted_first_response_time(wf, frozenset(), self._cm,
+                                             c.weight)
+            pool_scores[f"{c.mode}@p{c.pool_id}"] = s
+            if s < best_score:
+                best, best_score = c, s
+        self._decide("serve_job", f"{best.mode}@p{best.pool_id}",
+                     scores=pool_scores, aged=bool(aged))
+        if best.mode == "decode" and best.spec_len > 1:
+            return best.pool_id, self._choose_decode_arm(
+                best.n_dec, best.chunk, best.spec_len, best.pool_id)
+        return best.pool_id, best.mode
 
     def _choose_decode_arm(self, decode_slots: int, decode_chunk: int,
                            spec_len: int, pool_id: int) -> str:

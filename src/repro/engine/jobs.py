@@ -11,7 +11,11 @@ modeled).  The engine then applies the result-aware objectives from
   (first microbatch metrics for training, first emitted token for serving);
 * ``completion_time`` — time to drain every region.
 
-Two decisions are made this way today:
+The objectives split by who is waiting: **training decisions minimize
+completion time** (nobody reads anything until the whole step lands), while
+**serving decisions minimize first-response time** (a user is waiting on the
+first token) — weighted by priority class in the multi-pool case.  The
+decisions made this way today:
 
 * **train step path** (fused vs granulated): the granulated workflow puts
   every microbatch in its own region with a pipelined edge from the first
@@ -22,6 +26,20 @@ Two decisions are made this way today:
   blocking region upstream of decode — admitting a prefill chunk delays
   the first token out of the decode region by the full prefill cost, which
   is exactly why short decode batches preempt long prefills under min-FRT.
+* **multi-pool arbitration** (which slot pool ticks next): every pool
+  offers its candidate ticks as :class:`TickCandidate` descriptors; the
+  engine scores each candidate's ``serve_tick_workflow`` FRT — with the
+  pool's *own* measured per-token EMA as the cost term — divided by the
+  summed priority-class weight of the requests the tick advances, subject
+  to the per-class aging bound (no admitted prefill sits out more than its
+  class's ``max_defer`` scheduled ticks).
+
+Invariants the differential harness (tests/test_serve_differential.py)
+enforces on everything scheduled from here: greedy serve outputs are
+**bit-identical** to the static ``generate_static`` oracle under *every*
+tick ordering these decisions can produce (scheduling reorders work, never
+changes results — per-slot state is isolated and joins are reset-masked
+in-jit), across compact × speculative × multi-pool × priority sweeps.
 """
 from __future__ import annotations
 
@@ -147,6 +165,40 @@ def serve_tick_workflow(decode_slots: int, decode_chunk: int,
         wf.add_edge("pending", "prefill")
         wf.add_edge("prefill", "decode", blocking=True)
     return wf
+
+
+def pool_kind(kind: str, pool_id: int) -> str:
+    """CostBook key for a serve tick kind on one slot pool.  Tick jobs are
+    recorded under BOTH the global kind and this pool-scoped kind: the
+    global EMA bootstraps pools that have not run yet, the per-pool EMA is
+    what the multi-pool arbitration scores — it is the parallelism term of
+    the weighted-FRT objective (a pool on faster hardware shows a lower
+    measured per-token time and wins more ticks)."""
+    return f"{kind}:p{pool_id}"
+
+
+@dataclasses.dataclass
+class TickCandidate:
+    """One schedulable tick a slot pool offers the engine this round.
+
+    The serving engine builds one candidate per (pool, composition) pair
+    that has work — a decode candidate when any slot holds a pending
+    sampled token, a prefill candidate when any slot still consumes prompt
+    — and ``Engine.choose_serve_job`` arbitrates across all of them.
+    ``weight`` is the summed priority-class weight of the requests whose
+    first response the candidate advances; ``aged`` marks a candidate
+    containing a request past its class's ``max_defer`` bound, which
+    removes every non-aged candidate from consideration."""
+    pool_id: int
+    mode: str                  # "decode" | "prefill"
+    n_dec: int = 0             # decode-state participants in the pool
+    n_pre: int = 0             # prefilling participants in the pool
+    pre_toks: int = 0          # pending prompt tokens behind the tick
+    chunk: int = 1             # tick length this candidate would run
+    weight: float = 1.0        # summed class weight of advanced requests
+    aged: bool = False         # a participant hit its class aging bound
+    overdue: int = 0           # ticks past the tightest violated bound
+    spec_len: int = 0          # >1: the speculative arm is offered
 
 
 def accept_kind(pool_id: int) -> str:

@@ -39,6 +39,37 @@ speculative arm is host-gated to all-greedy participants because verifying
 sampled (temperature > 0) continuations greedily would change their
 distribution.
 
+**Multi-pool, priority-aware serving**: a ServeEngine owns ``pools`` slot
+pools (each a :class:`SlotPool` with its own donated cache pool; the tick
+jits are shared across pools via the memoized ``build_slot_tick``), and
+requests carry a ``priority`` naming one of ``cfg.serve.classes``.  Each
+scheduling round, every pool with work offers its candidate ticks
+(``jobs.TickCandidate``) and ``Engine.choose_serve_job`` picks ONE
+(pool, composition) under the weighted-FRT objective — candidate FRT costed
+with the pool's own measured per-token EMA, divided by the summed class
+weight of the requests the tick advances — subject to per-class aging
+bounds: an admitted prefill that has sat out ``max_defer`` scheduled ticks
+forces its pool's prefill candidate, whatever the weights say.  With one
+pool and the default single-class table the engine takes the original
+single-pool decision path (``Engine.choose_serve_tick``) unchanged.
+
+Scheduling objective: serving minimizes (weighted) **first-response time**
+— a user is waiting on the first token — where training minimizes
+completion time; see ``core.scheduler`` for both objectives.
+
+Invariants the differential harness (tests/test_serve_differential.py)
+enforces on this module:
+
+* **Greedy bit-identicality** — greedy outputs equal the static
+  ``BatchedServer.generate_static`` oracle, token for token, under every
+  tick ordering, pool count, priority mix, compact gather, and speculative
+  arm the scheduler can produce.  Scheduling reorders work; it must never
+  change results.
+* **Reset-mask join** — a request joins a slot by flagging the row for
+  in-jit zeroing (the ``reset`` mask) instead of eager scatters; no stale
+  cache, n-gram-table, or position state may leak between consecutive
+  occupants of a slot, in any pool.
+
 The per-slot compute is ``jax.vmap`` over the stock ``lm.decode_step`` —
 per-slot positions come from batching the *function*, not from touching the
 block-level cache layouts — and greedy outputs are bit-identical to the old
@@ -50,6 +81,7 @@ import dataclasses
 import functools
 import itertools
 import threading
+import time
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional
 
@@ -60,7 +92,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.breakpoints import GlobalCountBreakpoint, LocalBreakpoint
 from repro.engine.engine import Engine
-from repro.engine.jobs import Job
+from repro.engine.jobs import Job, TickCandidate, pool_kind
 from repro.models import lm
 
 
@@ -220,10 +252,21 @@ class Request:
     max_new: int
     temperature: float = 0.0
     key: Any = None                      # private PRNG key (sampling)
+    priority: str = "default"            # one of cfg.serve.classes
+    pin_pool: Optional[int] = None       # admission restricted to this pool
     tokens: List[int] = dataclasses.field(default_factory=list)
-    slot: int = -1
+    pool: int = -1                       # slot pool joined (-1: queued)
+    slot: int = -1                       # slot within the pool
     prompt_off: int = 0
     pending_tok: int = -1                # emitted but not yet fed back
+    # aging bookkeeping: scheduled ticks this prefill has sat out since it
+    # last advanced; the peak is kept for the starvation regression tests
+    deferred: int = 0
+    max_deferred: int = 0
+    # wall-clock marks for the latency benches (first-token / completion)
+    t_submit: float = 0.0
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
     done: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False)
 
@@ -235,12 +278,49 @@ class Request:
         return np.asarray(self.tokens[:self.max_new], np.int32)
 
 
+class SlotPool:
+    """One donated slot pool: the per-pool device state the tick mutates.
+
+    Every pool owns its cache rows, per-slot n-gram tables, positions, PRNG
+    keys and reset mask; the compiled tick functions are NOT per-pool —
+    ``build_slot_tick`` memoizes per (cfg, spec_len), so pools of equal slot
+    count share one jit.  ``pool_id`` is the engine-visible identity: tick
+    jobs are recorded under ``jobs.pool_kind(kind, pool_id)`` (the
+    per-pool cost EMAs the weighted-FRT arbitration scores) and acceptance
+    under ``jobs.accept_kind(pool_id)``."""
+
+    def __init__(self, cfg: ArchConfig, pool_id: int, slots: int,
+                 max_len: int, base_key):
+        self.pool_id = pool_id
+        self.slots = slots
+        one = lm.init_cache(cfg, 1, max_len)
+        self.pool = {
+            "caches": jax.tree.map(
+                lambda x: jnp.zeros((slots,) + x.shape, x.dtype),
+                one["caches"]),
+            # per-slot n-gram suffix table + its context window: part of the
+            # donated pool so draft proposal never leaves the device
+            "ng": jnp.zeros((slots, cfg.serve.spec_table), jnp.int32),
+            "ctx": jnp.zeros((slots, cfg.serve.spec_ctx), jnp.int32),
+        }
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.pos_host = np.zeros((slots,), np.int64)   # device-sync-free view
+        self.reset = np.zeros((slots,), bool)          # zero these rows in-jit
+        self.keys = jax.random.split(base_key, slots)
+        self.active: List[Optional[Request]] = [None] * slots
+
+    def free_slots(self) -> int:
+        return sum(r is None for r in self.active)
+
+
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, max_len: int = 128,
                  slots: int = 4, prefill_chunk: int = 16,
                  decode_chunk: int = 4, engine: Optional[Engine] = None,
                  seed: int = 0, compact_decode: bool = False,
-                 spec_decode: bool = False, pool_id: int = 0):
+                 spec_decode: bool = False, pool_id: int = 0,
+                 pools: int = 1,
+                 class_pools: Optional[Dict[str, tuple]] = None):
         self.cfg = cfg
         self.params = params
         self.engine = engine or Engine()
@@ -259,43 +339,72 @@ class ServeEngine:
         # speculative in-tick decoding (see module docstring): offers the
         # engine a third tick arm — n-gram draft + chunk-scan verify — whose
         # use is decided per tick from measured acceptance/runtime EMAs.
-        # ``pool_id`` namespaces this pool's acceptance EMA when several
-        # ServeEngines share one Engine.
+        # ``pool_id`` offsets this engine's pool ids (pools get
+        # pool_id..pool_id+pools-1) so acceptance and runtime EMAs stay
+        # namespaced when several ServeEngines share one Engine.
         self.spec_decode = spec_decode
         self.pool_id = pool_id
         self.spec_ticks = 0
         self.spec_proposed = 0      # draft tokens offered for verification
         self.spec_accepted = 0      # draft tokens committed
-        one = lm.init_cache(cfg, 1, max_len)
-        self.pool = {
-            "caches": jax.tree.map(
-                lambda x: jnp.zeros((slots,) + x.shape, x.dtype),
-                one["caches"]),
-            # per-slot n-gram suffix table + its context window: part of the
-            # donated pool so draft proposal never leaves the device
-            "ng": jnp.zeros((slots, cfg.serve.spec_table), jnp.int32),
-            "ctx": jnp.zeros((slots, cfg.serve.spec_ctx), jnp.int32),
-        }
-        self.pos = jnp.zeros((slots,), jnp.int32)
-        self.pos_host = np.zeros((slots,), np.int64)   # device-sync-free view
-        self._reset = np.zeros((slots,), bool)         # zero these rows in-jit
+        # priority classes: name -> PriorityClass; the first table entry is
+        # the default for requests submitted without a priority
+        self.classes = {c.name: c for c in cfg.serve.classes}
+        self._default_class = cfg.serve.classes[0].name
+        # optional class -> admissible-pool routing (BatchedServer wires
+        # this up); classes not listed may join any pool.  Validated here:
+        # a typo'd class name or out-of-range pool id must fail at
+        # construction, not mid-serve inside _admit
+        self.class_pools = dict(class_pools or {})
+        for cls, pids in self.class_pools.items():
+            assert cls in self.classes, \
+                f"class_pools names unknown class {cls!r}"
+            assert pids and all(0 <= p < max(int(pools), 1) for p in pids), \
+                f"class_pools[{cls!r}]={pids}: pool ids must be in " \
+                f"[0, {max(int(pools), 1)})"
         self._base_key = jax.random.PRNGKey(seed)
-        self.keys = jax.random.split(self._base_key, slots)
+        # pool registry: each pool its own donated device state; pool 0
+        # derives its slot keys straight from the engine seed (the exact
+        # pre-multi-pool layout), later pools fold their index in
+        self.pools: List[SlotPool] = [
+            SlotPool(cfg, pool_id + i, slots, max_len,
+                     self._base_key if i == 0
+                     else jax.random.fold_in(self._base_key,
+                                             0x7F000000 + i))
+            for i in range(max(int(pools), 1))]
         self._tick = build_slot_tick(cfg)
         self._compiled: set = set()    # (spec, tick_len, rows) already jitted
         self.queue: Deque[Request] = deque()
-        self.active: List[Optional[Request]] = [None] * slots
         self.tick_no = 0
         self.tokens_out = 0
         self._rid = itertools.count()
         self.hit_breakpoints: List[str] = []
 
+    # ------------------------------------------------ single-pool back-compat
+    @property
+    def active(self) -> List[Optional[Request]]:
+        """Admitted requests across every pool (slot-ordered within pools).
+        Read-only flattened view; per-pool state lives on ``self.pools``."""
+        return [r for sp in self.pools for r in sp.active]
+
+    @property
+    def single_pool(self) -> bool:
+        """True when scheduling can take the original single-pool path:
+        one pool AND the default single-class table.  This path is kept
+        decision-identical (not just output-identical) to the pre-priority
+        engine — the differential harness pins it against the static
+        oracle."""
+        return len(self.pools) == 1 and len(self.classes) == 1
+
     # ------------------------------------------------------------- requests
     def submit(self, prompt, max_new: int = 16, temperature: float = 0.0,
-               key=None) -> Request:
+               key=None, priority: Optional[str] = None,
+               pool: Optional[int] = None) -> Request:
         """Queue a request.  ``key`` pins the request's private sampling
         stream (reproducibility); default derives one from the engine seed
-        and the request id."""
+        and the request id.  ``priority`` names a ``cfg.serve.classes``
+        entry (default: the table's first class); ``pool`` pins admission
+        to one slot pool (default: class routing, then least-loaded)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size >= 1, "empty prompt"
         need = prompt.size + max_new + max(
@@ -303,17 +412,31 @@ class ServeEngine:
             self.cfg.serve.spec_len if self.spec_decode else 0)
         assert need <= self.max_len, \
             f"prompt+max_new+chunk={need} exceeds max_len={self.max_len}"
+        priority = priority or self._default_class
+        assert priority in self.classes, \
+            f"unknown priority {priority!r}; classes: {list(self.classes)}"
+        assert pool is None or 0 <= pool < len(self.pools), pool
         rid = next(self._rid)
         if key is None:
             key = jax.random.fold_in(self._base_key, rid)
-        req = Request(rid, prompt, max_new, temperature, key=key)
+        req = Request(rid, prompt, max_new, temperature, key=key,
+                      priority=priority, pin_pool=pool,
+                      t_submit=time.perf_counter())
         self.queue.append(req)
         return req
 
     def _evict(self, req: Request) -> None:
-        self.active[req.slot] = None
-        req.slot = -1
+        self.pools[req.pool].active[req.slot] = None
+        req.pool = req.slot = -1
+        req.t_done = time.perf_counter()
         req.done.set()
+
+    def _allowed_pools(self, req: Request) -> List[int]:
+        if req.pin_pool is not None:
+            return [req.pin_pool]
+        allowed = self.class_pools.get(req.priority)
+        return list(allowed) if allowed is not None \
+            else list(range(len(self.pools)))
 
     def _admit(self) -> None:
         """Join queued requests into free slots.  The cache-row zeroing and
@@ -321,21 +444,36 @@ class ServeEngine:
         mask) — stale recurrent/rolling state must not leak between
         requests, but eager per-join scatters cost more than the tick's
         compute at smoke scale.  Only the tiny per-slot PRNG key is written
-        eagerly (one batched scatter for all joiners)."""
-        joined = []
-        for slot in range(self.slots):
-            if self.active[slot] is None and self.queue:
-                req = self.queue.popleft()
-                req.slot = slot
-                self.active[slot] = req
-                self._reset[slot] = True
-                self.pos_host[slot] = 0
-                joined.append((slot, req))
-        if not joined:
-            return
-        idx = jnp.asarray([s for s, _ in joined], jnp.int32)
-        self.keys = self.keys.at[idx].set(jnp.stack(
-            [req.key for _, req in joined]))
+        eagerly (one batched scatter per pool for all its joiners).
+
+        Routing: a pinned request only joins its pool; otherwise the
+        class-routing table restricts the admissible pools, and among those
+        the emptiest pool wins (ties: lowest pool id).  Requests whose
+        admissible pools are all full stay queued — in order, without
+        blocking later requests bound for a free pool — via one linear
+        pass that rebuilds the queue."""
+        joined: Dict[int, list] = {}
+        remaining: Deque[Request] = deque()
+        for req in self.queue:
+            cands = [p for p in self._allowed_pools(req)
+                     if self.pools[p].free_slots() > 0]
+            if not cands:
+                remaining.append(req)
+                continue
+            pid = max(cands, key=lambda p: (self.pools[p].free_slots(), -p))
+            sp = self.pools[pid]
+            slot = next(s for s in range(sp.slots) if sp.active[s] is None)
+            req.pool, req.slot = pid, slot
+            sp.active[slot] = req
+            sp.reset[slot] = True
+            sp.pos_host[slot] = 0
+            joined.setdefault(pid, []).append((slot, req))
+        self.queue = remaining
+        for pid, js in joined.items():
+            sp = self.pools[pid]
+            idx = jnp.asarray([s for s, _ in js], jnp.int32)
+            sp.keys = sp.keys.at[idx].set(jnp.stack(
+                [req.key for _, req in js]))
 
     # -------------------------------------------------------------- control
     def _inspect(self, what: str) -> Dict[str, Any]:
@@ -349,8 +487,15 @@ class ServeEngine:
                 "slots": [None if r is None else
                           {"rid": r.rid, "prompt_off": r.prompt_off,
                            "plen": len(r.prompt), "out": len(r.tokens),
-                           "max_new": r.max_new}
+                           "max_new": r.max_new, "priority": r.priority,
+                           "deferred": r.deferred}
                           for r in self.active],
+                "pools": [{"id": sp.pool_id, "slots": sp.slots,
+                           "free": sp.free_slots()}
+                          for sp in self.pools],
+                "classes": {n: {"weight": c.weight,
+                                "max_defer": c.max_defer}
+                            for n, c in self.classes.items()},
                 "engine": self.engine.inspect()}
         return info
 
@@ -384,7 +529,8 @@ class ServeEngine:
                 self.engine.global_bps.remove(bp)
 
     # ----------------------------------------------------------------- tick
-    def _tick_len(self, act: List[Request], mode: str, chunk: int) -> int:
+    def _tick_len(self, sp: SlotPool, act: List[Request], mode: str,
+                  chunk: int) -> int:
         """Adaptive tick length: no slot needs more than its remaining
         horizon, so trim the chunk to the longest one (rounded up to a
         power of two — the tick jit specializes on L, and an arbitrary L
@@ -399,7 +545,7 @@ class ServeEngine:
             h = (len(r.prompt) - r.prompt_off) if r.prefilling \
                 else (r.max_new - len(r.tokens))
             need = max(need, min(h, chunk))
-            cap = min(cap, self.max_len - int(self.pos_host[r.slot]))
+            cap = min(cap, self.max_len - int(sp.pos_host[r.slot]))
         L = 1
         while L < need:
             L *= 2
@@ -408,48 +554,114 @@ class ServeEngine:
             L //= 2
         return L
 
+    def _pool_spec_ok(self, act: List[Request]) -> bool:
+        """The speculative arm is only offered when every decode participant
+        is greedy: verifying sampled continuations greedily would change
+        their distribution (module docstring)."""
+        dec = [r for r in act if not r.prefilling]
+        return (self.spec_decode and self.cfg.serve.spec_len > 1
+                and bool(dec) and all(r.temperature <= 0 for r in dec))
+
+    def _candidates(self) -> List[TickCandidate]:
+        """One TickCandidate per (pool, composition) with work: the menu
+        ``Engine.choose_serve_job`` arbitrates under weighted FRT.  A
+        prefill candidate is ``aged`` as soon as any of its requests has
+        sat out its class's ``max_defer`` scheduled ticks."""
+        cands = []
+        for sp in self.pools:
+            act = [r for r in sp.active if r is not None]
+            if not act:
+                continue
+            pre = [r for r in act if r.prefilling]
+            dec = [r for r in act if not r.prefilling]
+            weight = lambda rs: sum(self.classes[r.priority].weight
+                                    for r in rs)
+            if dec:
+                cands.append(TickCandidate(
+                    sp.pool_id, "decode", n_dec=len(dec), n_pre=len(pre),
+                    chunk=self.decode_chunk, weight=weight(dec),
+                    spec_len=self.cfg.serve.spec_len
+                    if self._pool_spec_ok(act) else 0))
+            if pre:
+                overdue = max(r.deferred - self.classes[r.priority].max_defer
+                              for r in pre)
+                cands.append(TickCandidate(
+                    sp.pool_id, "prefill", n_dec=len(dec), n_pre=len(pre),
+                    pre_toks=sum(len(r.prompt) - r.prompt_off for r in pre),
+                    chunk=self.prefill_chunk, weight=weight(pre),
+                    aged=overdue >= 0, overdue=max(overdue, 0)))
+        return cands
+
+    def _age_prefills(self, part: List[Request]) -> None:
+        """Post-tick aging bookkeeping: every ADMITTED prefill that did not
+        advance this tick — sat out a decode tick on its own pool, or lives
+        on a pool that lost the arbitration — ages one tick; participants
+        reset.  The counters drive the per-class aging bound (weighted
+        path) and the starvation regression tests."""
+        ran = set(id(r) for r in part)
+        for pool in self.pools:
+            for r in pool.active:
+                if r is None or not r.prefilling:
+                    continue
+                if id(r) in ran:
+                    r.deferred = 0
+                else:
+                    r.deferred += 1
+                    r.max_deferred = max(r.max_deferred, r.deferred)
+
     def tick(self) -> bool:
         """One engine iteration.  Returns False when stopped, True otherwise
         (including idle ticks).  Control messages land here — between ticks
         — and Inspect keeps answering while paused (the controller blocks
-        inside poll until Resume)."""
+        inside poll until Resume).
+
+        Scheduling: on the single-pool/single-class path the composition is
+        the original ``Engine.choose_serve_tick`` min-FRT decision; with
+        multiple pools or priority classes each pool's candidate ticks go
+        through ``Engine.choose_serve_job`` (weighted FRT + per-class aging
+        bounds) and exactly one pool runs a tick per round."""
         if self._poll():
             return False
         self._admit()
-        act = [r for r in self.active if r is not None]
-        if not act:
-            return True
-        n_pre = sum(r.prefilling for r in act)
-        n_dec = len(act) - n_pre
-        pre_toks = sum(len(r.prompt) - r.prompt_off
-                       for r in act if r.prefilling)
-        # the speculative arm is only offered when every decode participant
-        # is greedy: verifying sampled continuations greedily would change
-        # their distribution (module docstring)
         spec_len = self.cfg.serve.spec_len
-        spec_ok = (self.spec_decode and spec_len > 1 and n_dec > 0
-                   and all(r.temperature <= 0
-                           for r in act if not r.prefilling))
-        mode = self.engine.choose_serve_tick(
-            n_dec, n_pre, pre_toks, self.decode_chunk, self.prefill_chunk,
-            spec_len=spec_len if spec_ok else 0, pool_id=self.pool_id)
+        if self.single_pool:
+            sp = self.pools[0]
+            act = [r for r in sp.active if r is not None]
+            if not act:
+                return True
+            n_pre = sum(r.prefilling for r in act)
+            n_dec = len(act) - n_pre
+            pre_toks = sum(len(r.prompt) - r.prompt_off
+                           for r in act if r.prefilling)
+            mode = self.engine.choose_serve_tick(
+                n_dec, n_pre, pre_toks, self.decode_chunk,
+                self.prefill_chunk,
+                spec_len=spec_len if self._pool_spec_ok(act) else 0,
+                pool_id=sp.pool_id)
+        else:
+            cands = self._candidates()
+            if not cands:
+                return True
+            gid, mode = self.engine.choose_serve_job(cands)
+            sp = self.pools[gid - self.pool_id]
+            act = [r for r in sp.active if r is not None]
         if mode == "spec":
-            L = self._tick_len(act, mode, spec_len)
+            L = self._tick_len(sp, act, mode, spec_len)
             if L < 2:
                 mode = "decode"      # a 1-token tick has nothing to draft
         if mode != "spec":
             chunk = (self.prefill_chunk if mode == "prefill"
                      else self.decode_chunk)
-            L = self._tick_len(act, mode, chunk)
-        toks = np.zeros((self.slots, L), np.int32)
-        n_given = np.ones((self.slots,), np.int32)
-        active = np.zeros((self.slots,), bool)
-        temps = np.zeros((self.slots,), np.float32)
+            L = self._tick_len(sp, act, mode, chunk)
+        toks = np.zeros((sp.slots, L), np.int32)
+        n_given = np.ones((sp.slots,), np.int32)
+        active = np.zeros((sp.slots,), bool)
+        temps = np.zeros((sp.slots,), np.float32)
         part: List[Request] = []
         for r in act:
             if mode != "prefill" and r.prefilling:
                 continue                      # prefill slots sit this one out
-            if int(self.pos_host[r.slot]) + L > self.max_len:
+            if int(sp.pos_host[r.slot]) + L > self.max_len:
                 continue                      # defensive: never overrun cache
             s = r.slot
             if r.prefilling:
@@ -471,15 +683,15 @@ class ServeEngine:
         # sat-out slots keep their pending reset flags and cache state.
         part_slots = [r.slot for r in part]
         compact = (self.compact_decode and mode != "prefill"
-                   and len(part) <= self.slots // 2)
+                   and len(part) <= sp.slots // 2)
         if compact:
             nc = 1
             while nc < len(part):
                 nc *= 2
-            pads = [s for s in range(self.slots) if s not in set(part_slots)]
+            pads = [s for s in range(sp.slots) if s not in set(part_slots)]
             idx = np.asarray(part_slots + pads[:nc - len(part)], np.int32)
         else:
-            idx = np.arange(self.slots, dtype=np.int32)
+            idx = np.arange(sp.slots, dtype=np.int32)
         rows = len(idx)
         spec = mode == "spec"
         cold = (spec, L, rows) not in self._compiled  # fresh specialization:
@@ -487,45 +699,52 @@ class ServeEngine:
         kind = {"prefill": "serve_prefill", "decode": "serve_decode",
                 "spec": "serve_spec_decode"}[mode]
         job = Job(kind, tokens=L * len(part), meta={"cold": cold})
+        # the same measurement lands under the pool-scoped kind too: the
+        # per-pool EMA is the parallelism term of the multi-pool arbitration
+        pjob = Job(pool_kind(kind, sp.pool_id), tokens=L * len(part),
+                   meta={"cold": cold})
         # build_slot_tick memoizes per (cfg, spec_len), so this lookup is a
         # cache hit after the first speculative tick
         fn = build_slot_tick(self.cfg, self.cfg.serve.spec_len) if spec \
             else self._tick
         if compact:
             jidx = jnp.asarray(idx)
-            pool_c = jax.tree.map(lambda c: c[jidx], self.pool)
+            pool_c = jax.tree.map(lambda c: c[jidx], sp.pool)
             pool_n, pos_n, keys_n, emitted, nvalid = self.engine.run_job(
                 job, lambda: jax.block_until_ready(fn(
-                    self.params, pool_c, self.pos[jidx],
+                    self.params, pool_c, sp.pos[jidx],
                     jnp.asarray(toks[idx]), jnp.asarray(n_given[idx]),
-                    jnp.asarray(active[idx]), jnp.asarray(self._reset[idx]),
-                    self.keys[jidx], jnp.asarray(temps[idx]))))
-            self.pool = jax.tree.map(lambda p, n: p.at[jidx].set(n),
-                                     self.pool, pool_n)
-            self.pos = self.pos.at[jidx].set(pos_n)
-            self.keys = self.keys.at[jidx].set(keys_n)
-            self._reset[idx] = False
+                    jnp.asarray(active[idx]), jnp.asarray(sp.reset[idx]),
+                    sp.keys[jidx], jnp.asarray(temps[idx]))),
+                extra=(pjob,))
+            sp.pool = jax.tree.map(lambda p, n: p.at[jidx].set(n),
+                                   sp.pool, pool_n)
+            sp.pos = sp.pos.at[jidx].set(pos_n)
+            sp.keys = sp.keys.at[jidx].set(keys_n)
+            sp.reset[idx] = False
             em_rows = np.asarray(emitted)
-            em = np.zeros((self.slots, L), em_rows.dtype)
+            em = np.zeros((sp.slots, L), em_rows.dtype)
             em[idx] = em_rows
-            nv = np.zeros((self.slots,), np.int64)
+            nv = np.zeros((sp.slots,), np.int64)
             nv[idx] = np.asarray(nvalid)
             self.compact_ticks += 1
         else:
-            self.pool, self.pos, self.keys, emitted, nvalid = \
+            sp.pool, sp.pos, sp.keys, emitted, nvalid = \
                 self.engine.run_job(
                     job, lambda: jax.block_until_ready(fn(
-                        self.params, self.pool, self.pos, jnp.asarray(toks),
+                        self.params, sp.pool, sp.pos, jnp.asarray(toks),
                         jnp.asarray(n_given), jnp.asarray(active),
-                        jnp.asarray(self._reset), self.keys,
-                        jnp.asarray(temps))))
-            self._reset[:] = False            # zeroing landed inside the jit
+                        jnp.asarray(sp.reset), sp.keys,
+                        jnp.asarray(temps))),
+                    extra=(pjob,))
+            sp.reset[:] = False           # zeroing landed inside the jit
             em = np.asarray(emitted)
             nv = np.asarray(nvalid).astype(np.int64)
         # the tick reports how far each slot really advanced: L for every
         # active slot on the plain arms, the committed prefix under spec
-        self.pos_host += nv
+        sp.pos_host += nv
         n_new = 0
+        now = time.perf_counter()
         for r in part:
             s, g = r.slot, int(n_given[r.slot])
             if r.prefilling:
@@ -535,6 +754,8 @@ class ServeEngine:
             need = r.max_new - len(r.tokens)
             last = int(nv[s]) if spec else L
             outs = em[s, g - 1:last][:need]
+            if outs.size and r.t_first is None:
+                r.t_first = now               # first-token latency mark
             r.tokens.extend(int(t) for t in outs)
             n_new += len(outs)
             if len(r.tokens) >= r.max_new:
@@ -548,8 +769,9 @@ class ServeEngine:
             self.spec_proposed += proposed
             self.spec_accepted += accepted
             if proposed:
-                self.engine.observe_accept(self.pool_id,
+                self.engine.observe_accept(sp.pool_id,
                                            accepted / proposed)
+        self._age_prefills(part)
         self.tokens_out += n_new
         self._check_breakpoints(n_new)
         self.tick_no += 1
@@ -565,16 +787,20 @@ class ServeEngine:
         raise RuntimeError("serve engine did not drain within max_ticks")
 
     def generate(self, prompts: np.ndarray, max_new: int = 16,
-                 temperature: float = 0.0, seed=None) -> np.ndarray:
+                 temperature: float = 0.0, seed=None,
+                 priorities=None) -> np.ndarray:
         """Batch convenience with the old ``BatchedServer.generate``
         contract: rectangular prompts in, ``[B, max_new]`` tokens out.
         ``seed`` pins per-request sampling keys, so repeated calls with the
         same seed reproduce (per request, not per lockstep batch — the
-        old static path shared one key across the batch)."""
+        old static path shared one key across the batch).  ``priorities``
+        optionally names a traffic class per prompt."""
         base = None if seed is None else jax.random.PRNGKey(seed)
         reqs = [self.submit(p, max_new, temperature,
                             key=None if base is None
-                            else jax.random.fold_in(base, i))
+                            else jax.random.fold_in(base, i),
+                            priority=None if priorities is None
+                            else priorities[i])
                 for i, p in enumerate(prompts)]
         self.run_until_done()
         return np.stack([r.output() for r in reqs])

@@ -50,11 +50,20 @@ class BatchedServer:
     prefill, control plane between ticks).  The pre-engine loop — static
     batch, prefill one token per dispatch — survives as
     ``generate_static``: it is the benchmark baseline and the output-
-    equivalence oracle for the engine path."""
+    equivalence oracle for the engine path.
+
+    Priority routing: ``pools`` > 1 spreads requests over several slot
+    pools arbitrated by the engine's weighted-FRT objective, and
+    ``class_pools`` (class name -> tuple of admissible pool ids) pins
+    traffic classes to pools — e.g. reserve pool 0 for the interactive
+    class while batch traffic shares the rest.  ``generate`` takes an
+    optional per-prompt ``priorities`` list naming ``cfg.serve.classes``
+    entries; ``submit`` exposes the streaming API with the same knobs."""
 
     def __init__(self, cfg: ArchConfig, params, max_len: int = 128,
                  slots: int = 4, prefill_chunk: int = 16,
-                 decode_chunk: int = 4, spec_decode: bool = False):
+                 decode_chunk: int = 4, spec_decode: bool = False,
+                 pools: int = 1, class_pools: Optional[Dict] = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -62,6 +71,8 @@ class BatchedServer:
         self.prefill_chunk = prefill_chunk
         self.decode_chunk = decode_chunk
         self.spec_decode = spec_decode
+        self.pools = pools
+        self.class_pools = class_pools
         self._step = None                # static-path jit, built on demand
         self._engine = None
 
@@ -72,15 +83,25 @@ class BatchedServer:
                 self.cfg, self.params, max_len=self.max_len,
                 slots=self.slots, prefill_chunk=self.prefill_chunk,
                 decode_chunk=self.decode_chunk, seed=seed,
-                spec_decode=self.spec_decode)
+                spec_decode=self.spec_decode, pools=self.pools,
+                class_pools=self.class_pools)
         return self._engine
 
+    def submit(self, prompt, max_new: int = 16, temperature: float = 0.0,
+               priority: Optional[str] = None, pool: Optional[int] = None):
+        """Streaming API: queue one request on the engine and return the
+        live :class:`repro.engine.Request` (drive with ``engine().tick()``
+        or ``engine().run_until_done()``)."""
+        return self.engine().submit(prompt, max_new, temperature,
+                                    priority=priority, pool=pool)
+
     def generate(self, prompts: np.ndarray, max_new: int = 16,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 priorities=None):
         # seed pins per-request sampling keys on every call (the cached
         # ServeEngine's own seed only covers requests submitted without one)
         return self.engine(seed).generate(prompts, max_new, temperature,
-                                          seed=seed)
+                                          seed=seed, priorities=priorities)
 
     def generate_static(self, prompts: np.ndarray, max_new: int = 16,
                         temperature: float = 0.0, seed: int = 0):

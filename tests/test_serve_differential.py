@@ -7,7 +7,9 @@ join/evict pressure (more requests than slots), control-message
 interleavings delivered between ticks, and hot config updates — and asserts
 that ``ServeEngine`` greedy outputs are **bit-identical** to the static
 ``BatchedServer.generate_static`` oracle across ``compact_decode`` ×
-``spec_decode``.  Speculative decode makes this the load-bearing test: its
+``spec_decode`` × ``pools`` (multi-pool runs take the weighted-FRT
+``choose_serve_job`` arbitration; the priority-class-specific paths are
+pinned separately in tests/test_serve_priority.py).  Speculative decode makes this the load-bearing test: its
 acceptance mask must commit exactly the tokens plain greedy decode would
 have produced, under every join/evict/control interleaving.
 
@@ -94,6 +96,10 @@ def gen_scenario(rng):
         "decode_chunk": int(rng.choice(DECODE_CHUNKS)),
         "compact": bool(rng.integers(2)),
         "spec": bool(rng.integers(2)),
+        # 1 pool -> the legacy single-pool decision path; 2 pools -> the
+        # weighted multi-pool arbitration.  Pool slot counts stay inside
+        # SLOTS, so no new tick-jit specializations enter the sweep.
+        "pools": int(rng.integers(1, 3)),
         # 0..2 control batches at distinct tick indices
         "schedule": {int(t): str(rng.choice(CTL_KINDS))
                      for t in rng.choice(7, size=int(rng.integers(0, 3)),
@@ -108,7 +114,7 @@ def run_scenario(sc):
                       prefill_chunk=sc["prefill_chunk"],
                       decode_chunk=sc["decode_chunk"],
                       compact_decode=sc["compact"],
-                      spec_decode=sc["spec"])
+                      spec_decode=sc["spec"], pools=sc.get("pools", 1))
     reqs = [eng.submit(p, max_new=n)
             for p, n in zip(sc["prompts"], sc["max_news"])]
     ctl_rng = np.random.default_rng(sc["ctl_seed"])
@@ -126,6 +132,7 @@ def run_scenario(sc):
             err_msg=(f"req {i}: plen={len(p)} max_new={n} slots={sc['slots']}"
                      f" pc={sc['prefill_chunk']} dc={sc['decode_chunk']}"
                      f" compact={sc['compact']} spec={sc['spec']}"
+                     f" pools={sc.get('pools', 1)}"
                      f" schedule={sc['schedule']}"))
     return eng
 
@@ -198,6 +205,7 @@ if HAVE_HYPOTHESIS:
                                       label="decode_chunk"),
             "compact": data.draw(st.booleans(), label="compact"),
             "spec": data.draw(st.booleans(), label="spec"),
+            "pools": data.draw(st.integers(1, 2), label="pools"),
             "schedule": data.draw(
                 st.dictionaries(st.integers(0, 6),
                                 st.sampled_from(CTL_KINDS), max_size=2),
