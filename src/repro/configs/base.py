@@ -91,6 +91,30 @@ class ServeCfg:
     # default class for requests submitted without an explicit priority.
     classes: Tuple[PriorityClass, ...] = (PriorityClass(),)
 
+    # Cross-request prefix cache (ServeEngine(prefix_cache=True)): a radix
+    # tree over committed token prefixes whose nodes snapshot donated-pool
+    # slot rows, so a joining request that shares a cached prefix seeds its
+    # cache state instead of re-prefilling, plus an exact-hit result cache
+    # over finished greedy outputs.  Whether a match is used is a measured
+    # engine decision (Engine.choose_prefix_admission), not a heuristic.
+    # max live prefix snapshots (LRU-evicted beyond this; pinned and
+    # in-flight-referenced snapshots are not evictable).
+    prefix_cache_nodes: int = 128
+    # shortest prefix worth snapshotting/seeding: below this the row copy
+    # costs more than the prefill it would save.
+    prefix_min_len: int = 4
+    # exact-hit result-cache entries (0 disables the result cache).
+    result_cache_entries: int = 256
+    # also snapshot a request's full committed path (prompt + generated)
+    # into the tree when it completes ("commit extends the tree").  Default
+    # off: the per-evict row copy only pays off on agent-loop workloads
+    # where one response is the next request's prompt prefix.
+    snapshot_on_evict: bool = False
+    # workload analyzer: a prefix seen >= pin_count times inside the
+    # sliding history window is pinned against eviction.
+    prefix_pin_count: int = 3
+    prefix_history: int = 512
+
 
 @dataclasses.dataclass(frozen=True)
 class SSMCfg:

@@ -136,6 +136,23 @@ def weighted_first_response_time(wf: Workflow, choice: FrozenSet[Edge],
     return first_response_time(wf, choice, cm) / max(weight, 1e-9)
 
 
+def compare_frt(candidates: Dict[str, Workflow], cm: CostModel,
+                weight: float = 1.0) -> Tuple[str, Dict[str, float]]:
+    """Arbitrate named alternative workflows under (weighted) FRT: returns
+    ``(best_name, scores)`` with the minimum-FRT candidate first and every
+    candidate's score for the decision audit trail.  This is the
+    reuse-vs-recompute comparator: the engine hands it e.g.
+    ``{"seed": prefix_seed_workflow(...), "prefill": prefill_workflow(...)}``
+    and takes whichever path answers the waiting user first — the §4.5
+    min-FRT rule applied to materialized intermediate state instead of tick
+    composition.  Ties break on candidate name for determinism."""
+    assert candidates, "compare_frt needs at least one candidate"
+    scores = {name: weighted_first_response_time(wf, frozenset(), cm, weight)
+              for name, wf in candidates.items()}
+    best = min(sorted(scores), key=scores.get)
+    return best, scores
+
+
 def score_choices(wf: Workflow, cm: CostModel,
                   objective: str = "frt",
                   weight: float = 1.0) -> List[Tuple[float, float,

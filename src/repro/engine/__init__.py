@@ -3,18 +3,26 @@
 Training and serving run as region-structured, result-aware *jobs* under one
 Amber-style executor — see ``engine.engine.Engine`` (control plane + cost
 book + decisions), ``engine.jobs`` (the job -> region-workflow mapping), and
-``engine.serve.ServeEngine`` (continuous batching).  ``runtime.loop`` and
-``runtime.serve`` are clients of this layer.
+``engine.serve.ServeEngine`` (continuous batching).  ``engine.prefix_cache``
+makes prefilled state a reusable artifact: a radix tree of slot-row
+snapshots plus an exact-hit result cache, consulted at admission through a
+measured FRT decision.  ``runtime.loop`` and ``runtime.serve`` are clients
+of this layer.
 """
 from repro.engine.engine import Engine
 from repro.engine.jobs import (Job, TickCandidate, accept_kind,
                                checkpoint_workflow, pool_kind,
+                               prefill_workflow, prefix_seed_workflow,
                                serve_decode_workflow, serve_tick_workflow,
                                train_step_workflow)
+from repro.engine.prefix_cache import (PrefixAnalyzer, PrefixCache,
+                                       request_fingerprint)
 from repro.engine.serve import (Request, ServeEngine, SlotPool,
                                 build_slot_tick)
 
-__all__ = ["Engine", "Job", "Request", "ServeEngine", "SlotPool",
-           "TickCandidate", "accept_kind", "build_slot_tick",
-           "checkpoint_workflow", "pool_kind", "serve_decode_workflow",
+__all__ = ["Engine", "Job", "PrefixAnalyzer", "PrefixCache", "Request",
+           "ServeEngine", "SlotPool", "TickCandidate", "accept_kind",
+           "build_slot_tick", "checkpoint_workflow", "pool_kind",
+           "prefill_workflow", "prefix_seed_workflow",
+           "request_fingerprint", "serve_decode_workflow",
            "serve_tick_workflow", "train_step_workflow"]

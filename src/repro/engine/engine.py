@@ -44,7 +44,7 @@ from typing import Any, Callable, Dict, List, Optional
 from repro.core.breakpoints import GlobalCountBreakpoint, LocalBreakpoint
 from repro.core.controller import Controller
 from repro.core.estimator import CostBook
-from repro.core.scheduler import (CostModel, completion_time,
+from repro.core.scheduler import (CostModel, compare_frt, completion_time,
                                   first_response_time,
                                   weighted_first_response_time)
 from repro.engine import jobs as J
@@ -66,6 +66,7 @@ class Engine:
         self._prefill_defer = 0
         self._dispatch_rounds: Dict[int, int] = {}
         self._serve_rounds: Dict[int, int] = {}
+        self._seed_rounds: Dict[int, int] = {}
         self._cm = CostModel(parallelism=1.0)
 
     # ---------------------------------------------------------- control plane
@@ -295,6 +296,48 @@ class Engine:
             return best.pool_id, self._choose_decode_arm(
                 best.n_dec, best.chunk, best.spec_len, best.pool_id)
         return best.pool_id, best.mode
+
+    def choose_prefix_admission(self, cached_tokens: int,
+                                suffix_tokens: int,
+                                pool_id: int = 0) -> str:
+        """Reuse a cached prefix snapshot or recompute the prefill — the
+        result-aware admission decision (returns ``"seed"`` or
+        ``"prefill"``).
+
+        Both alternatives are priced as region workflows under min-FRT
+        (``scheduler.compare_frt``): ``jobs.prefix_seed_workflow`` pays one
+        cache-row copy (the pool's measured ``serve_seed`` EMA — constant
+        in the prefix length) plus the unshared suffix at the pool's
+        per-token prefill EMA; ``jobs.prefill_workflow`` pays every prompt
+        token.  "Copy what we already know" therefore wins exactly when the
+        copy is cheaper than recomputing the cached tokens *on this pool's
+        measured hardware*, not by assumption.  Bootstrap explores the seed
+        arm (the only way its copy cost gets measured), and when prefill
+        keeps winning the seed arm is re-explored every 16th decision so a
+        stale or compile-poisoned copy EMA cannot wedge reuse off forever.
+        """
+        assert cached_tokens > 0 and suffix_tokens > 0
+        t_seed = self.costs.estimate_first(
+            [J.pool_kind("serve_seed", pool_id), "serve_seed"])
+        if t_seed is None:
+            return self._decide("prefix_admission", "seed", why="bootstrap",
+                                pool=pool_id, cached=cached_tokens)
+        t_tok = self.costs.estimate_first(
+            [J.pool_kind("serve_prefill", pool_id) + "_per_tok",
+             "serve_prefill_per_tok"], 1e-3)
+        best, scores = compare_frt(
+            {"seed": J.prefix_seed_workflow(cached_tokens, suffix_tokens,
+                                            t_seed, t_tok),
+             "prefill": J.prefill_workflow(cached_tokens + suffix_tokens,
+                                           t_tok)}, self._cm)
+        self._seed_rounds[pool_id] = self._seed_rounds.get(pool_id, 0) + 1
+        if best == "prefill" and self._seed_rounds[pool_id] % 16 == 0:
+            return self._decide("prefix_admission", "seed",
+                                why="re-explore", pool=pool_id,
+                                cached=cached_tokens, scores=scores)
+        return self._decide("prefix_admission", best, pool=pool_id,
+                            cached=cached_tokens, suffix=suffix_tokens,
+                            scores=scores)
 
     def _choose_decode_arm(self, decode_slots: int, decode_chunk: int,
                            spec_len: int, pool_id: int) -> str:

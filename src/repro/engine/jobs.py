@@ -57,7 +57,7 @@ class Job:
     refines the cost model used to schedule the next one."""
     kind: str                 # train_step_fused | train_step_granulated |
     #                           serve_prefill | serve_decode |
-    #                           serve_spec_decode | checkpoint
+    #                           serve_spec_decode | serve_seed | checkpoint
     tokens: int = 0           # data-plane size (tokens processed)
     meta: Optional[dict] = None
 
@@ -251,6 +251,52 @@ def serve_decode_workflow(arm: str, decode_slots: int, chunk: int,
     return wf
 
 
+def prefill_workflow(prompt_tokens: int, t_token: float) -> Workflow:
+    """Admission by recomputation: prefill the WHOLE prompt from token 0.
+    The prefill region sits behind a blocking edge into decode — every
+    prompt token is paid before the first response token can stream out,
+    so the workflow's FRT is ``prompt_tokens * t_token`` plus the decode
+    pipeline fill.  This is the baseline ``Engine.choose_prefix_admission``
+    prices the cached alternative against."""
+    wf = Workflow()
+    wf.add_op(Op("prompt", "scan", cost_per_tuple=0.0,
+                 source_cardinality=float(max(prompt_tokens, 1))))
+    wf.add_op(Op("prefill", "ml", cost_per_tuple=t_token))
+    wf.add_op(Op("decode", "ml", cost_per_tuple=t_token))
+    wf.add_op(Op("stream_out", "sink", cost_per_tuple=0.0))
+    wf.add_edge("prompt", "prefill")
+    wf.add_edge("prefill", "decode", blocking=True)
+    wf.add_edge("decode", "stream_out")
+    return wf
+
+
+def prefix_seed_workflow(cached_tokens: int, suffix_tokens: int,
+                        t_seed: float, t_token: float) -> Workflow:
+    """Admission by reuse: copy a cached prefix snapshot into the joining
+    slot (one batched row write — ``t_seed``, a *constant* cost set by the
+    cache-row size, not by how many tokens the snapshot encodes), then
+    prefill only the unshared suffix.  The seed-copy region is the
+    materialized intermediate state being read back — Whiz's reuse edge as
+    a region — and blocks the suffix prefill exactly as prefill blocks
+    decode.  FRT therefore compares ``t_seed + suffix·t_token`` against
+    recomputation's ``(cached+suffix)·t_token``: reuse wins whenever the
+    copy is cheaper than recomputing the cached tokens, which is the
+    result-aware decision in one inequality."""
+    wf = Workflow()
+    wf.add_op(Op("snapshot", "scan", cost_per_tuple=t_seed,
+                 source_cardinality=1.0))
+    wf.add_op(Op("seed_copy", "ml", cost_per_tuple=0.0,
+                 selectivity=float(max(suffix_tokens, 1))))
+    wf.add_op(Op("prefill_suffix", "ml", cost_per_tuple=t_token))
+    wf.add_op(Op("decode", "ml", cost_per_tuple=t_token))
+    wf.add_op(Op("stream_out", "sink", cost_per_tuple=0.0))
+    wf.add_edge("snapshot", "seed_copy")
+    wf.add_edge("seed_copy", "prefill_suffix", blocking=True)
+    wf.add_edge("prefill_suffix", "decode", blocking=True)
+    wf.add_edge("decode", "stream_out")
+    return wf
+
+
 def checkpoint_workflow(t_save: float) -> Workflow:
     """Checkpoint as a blocking region between steps (the §2.6 barrier)."""
     wf = Workflow()
@@ -270,5 +316,9 @@ COST_DEFAULTS: Dict[str, float] = {
     "serve_decode": 0.01,
     "serve_spec_decode": 0.01,
     "serve_prefill": 0.05,
+    # one batched cache-row copy (prefix-cache seeding); cheaper than a
+    # prefill chunk by construction — the bootstrap must favor exploring
+    # the seed arm so its real cost gets measured
+    "serve_seed": 0.002,
     "checkpoint": 0.50,
 }

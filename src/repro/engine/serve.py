@@ -53,6 +53,26 @@ forces its pool's prefill candidate, whatever the weights say.  With one
 pool and the default single-class table the engine takes the original
 single-pool decision path (``Engine.choose_serve_tick``) unchanged.
 
+**Cross-request prefix cache + result cache** (``prefix_cache=True``): the
+engine treats the KV/SSM state of every prefix it has prefilled as a
+first-class, reusable artifact (``engine.prefix_cache``).  At prefill tick
+boundaries a still-prefilling slot's pool row — every cache leaf plus its
+n-gram table, at the frozen position — is snapshotted into a radix tree
+keyed by the consumed token prefix; a joining request that shares a cached
+prefix *seeds* its slot from the snapshot with one jitted batched row write
+(the same no-eager-scatter discipline as the reset-mask join) and prefills
+only the unshared suffix, and an exact-repeat greedy request is answered
+straight from the result cache without touching a slot.  Reuse is a
+measured Maestro decision, not a heuristic: ``Engine.choose_prefix_admission``
+prices ``jobs.prefix_seed_workflow`` (copy + suffix) against
+``jobs.prefill_workflow`` (recompute) with per-pool CostBook EMAs.  Seeding
+and result hits are host-gated to greedy requests, like the speculative
+arm: a sampled request's key stream advances once per scan step, so
+skipping prefill steps would change which draws produce its tokens.
+Seeded state is bit-identical to recomputation by construction — the tick
+consumes tokens one ``lm.decode_step`` at a time, so the state after P
+tokens does not depend on chunking or on which slot ran them.
+
 Scheduling objective: serving minimizes (weighted) **first-response time**
 — a user is waiting on the first token — where training minimizes
 completion time; see ``core.scheduler`` for both objectives.
@@ -93,6 +113,7 @@ from repro.configs.base import ArchConfig
 from repro.core.breakpoints import GlobalCountBreakpoint, LocalBreakpoint
 from repro.engine.engine import Engine
 from repro.engine.jobs import Job, TickCandidate, pool_kind
+from repro.engine.prefix_cache import PrefixAnalyzer, PrefixCache
 from repro.models import lm
 
 
@@ -107,6 +128,16 @@ def sample_traced(logits, key, temp):
 
 # xxhash/murmur-style odd multipliers, one per n-gram context position
 _NG_MULTS = (0x9E3779B1, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F)
+
+# cache families whose writes are position-addressed: a rejected speculative
+# step's write lands at (or rings onto) the index of the first uncommitted
+# position, which every read masks out (attention masks keys past ``pos``)
+# and which the next *accepted* token overwrites before it is ever read —
+# so these leaves need no valid-mask in the speculative scan.  Recurrent
+# and rolling-window state (rwkv's mixed states, mamba's conv window and
+# SSM state) mutates in place every step and MUST stay masked: it cannot
+# be position-rewound.
+_POSITIONAL_CACHE_TYPES = ("attn", "local", "moe", "shared_attn", "dec")
 
 
 @functools.lru_cache(maxsize=None)
@@ -195,12 +226,17 @@ def build_slot_tick(cfg: ArchConfig, spec_len: int = 0):
                     params, {"caches": caches, "pos": pos}, tok[None, None],
                     cfg)
                 nxt = jnp.argmax(logits[0], -1).astype(jnp.int32)
-                # freeze ALL state past the first mismatch: recurrent/conv
-                # caches cannot be position-rewound, so rejected steps must
-                # never have written anything
-                caches = jax.tree.map(
-                    lambda o, n: jnp.where(valid, n, o), caches,
-                    new["caches"])
+                # freeze only NON-positional state past the first mismatch:
+                # KV rows a rejected step writes sit past the frozen pos —
+                # dead until the next accepted token overwrites them — but
+                # recurrent/rolling leaves cannot be position-rewound, so
+                # their rejected writes must be masked out
+                caches = {
+                    t: (new["caches"][t] if t in _POSITIONAL_CACHE_TYPES
+                        else jax.tree.map(
+                            lambda o, n: jnp.where(valid, n, o),
+                            caches[t], new["caches"][t]))
+                    for t in caches}
                 pos = jnp.where(valid, new["pos"], pos)
                 nxt_ok = jnp.where(j + 1 < L,
                                    toks[jnp.minimum(j + 1, L - 1)] == nxt,
@@ -245,6 +281,30 @@ def build_slot_tick(cfg: ArchConfig, spec_len: int = 0):
                    donate_argnums=(1,))
 
 
+@functools.lru_cache(maxsize=None)
+def build_row_snapshot(cfg: ArchConfig):
+    """Jitted single-row gather: one slot's full pool row (every cache
+    leaf, n-gram table, context window) as fresh buffers — the capture side
+    of the prefix cache.  ``slot`` is traced, so one compile covers every
+    slot; memoized per cfg like ``build_slot_tick``."""
+    return jax.jit(lambda pool, slot: jax.tree.map(lambda p: p[slot], pool))
+
+
+@functools.lru_cache(maxsize=None)
+def build_seed_write(cfg: ArchConfig):
+    """Jitted batched seed write: scatter ``k`` snapshot rows (and their
+    frozen positions) into a donated slot pool in ONE dispatch — the join
+    path's no-eager-scatter discipline applied to seeding.  Writing the
+    whole row subsumes the reset-mask zeroing: a seeded slot starts from
+    the snapshot state exactly as a reset slot starts from zeros, so no
+    stale state can leak from the previous occupant."""
+    def seed(pool, pos, idx, rows, new_pos):
+        pool = jax.tree.map(lambda p, r: p.at[idx].set(r), pool, rows)
+        return pool, pos.at[idx].set(new_pos)
+
+    return jax.jit(seed, donate_argnums=(0, 1))
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -259,6 +319,8 @@ class Request:
     slot: int = -1                       # slot within the pool
     prompt_off: int = 0
     pending_tok: int = -1                # emitted but not yet fed back
+    seed_node: Any = None                # prefix-cache node this slot seeded
+    #                                      from (ref held until eviction)
     # aging bookkeeping: scheduled ticks this prefill has sat out since it
     # last advanced; the peak is kept for the starvation regression tests
     deferred: int = 0
@@ -320,7 +382,8 @@ class ServeEngine:
                  seed: int = 0, compact_decode: bool = False,
                  spec_decode: bool = False, pool_id: int = 0,
                  pools: int = 1,
-                 class_pools: Optional[Dict[str, tuple]] = None):
+                 class_pools: Optional[Dict[str, tuple]] = None,
+                 prefix_cache: bool = False, params_version: int = 0):
         self.cfg = cfg
         self.params = params
         self.engine = engine or Engine()
@@ -374,6 +437,21 @@ class ServeEngine:
             for i in range(max(int(pools), 1))]
         self._tick = build_slot_tick(cfg)
         self._compiled: set = set()    # (spec, tick_len, rows) already jitted
+        # cross-request prefix cache + result cache (module docstring):
+        # snapshots committed prompt prefixes at prefill tick boundaries and
+        # seeds joining slots from the deepest match when the engine's
+        # measured FRT comparison says the seed path answers first.
+        # ``params_version`` keys the result cache: a hot weight swap bumps
+        # it so stale answers cannot serve.
+        sc = cfg.serve
+        self.params_version = params_version
+        self.prefix: Optional[PrefixCache] = PrefixCache(
+            sc.prefix_cache_nodes, sc.prefix_min_len,
+            sc.result_cache_entries) if prefix_cache else None
+        self._analyzer = PrefixAnalyzer(sc.prefix_min_len,
+                                        sc.prefix_pin_count,
+                                        sc.prefix_history)
+        self._n_submitted = 0
         self.queue: Deque[Request] = deque()
         self.tick_no = 0
         self.tokens_out = 0
@@ -422,14 +500,69 @@ class ServeEngine:
         req = Request(rid, prompt, max_new, temperature, key=key,
                       priority=priority, pin_pool=pool,
                       t_submit=time.perf_counter())
+        if self.prefix is not None:
+            # workload analyzer: count this prompt's grid prefixes and
+            # periodically pin the hottest ones against LRU eviction
+            self._analyzer.record(prompt)
+            self._n_submitted += 1
+            if self._n_submitted % 32 == 0:
+                for p in self._analyzer.hot_prefixes()[:8]:
+                    self.prefix.pin(p)
         self.queue.append(req)
         return req
 
     def _evict(self, req: Request) -> None:
-        self.pools[req.pool].active[req.slot] = None
+        sp = self.pools[req.pool]
+        if self.prefix is not None:
+            if self.cfg.serve.snapshot_on_evict:
+                # "commit extends the tree": snapshot the slot's full
+                # committed path (prompt + generated) so an agent-loop
+                # follow-up whose prompt extends this response seeds from
+                # here.  Off by default — the per-evict row copy only pays
+                # off on such workloads.
+                path = np.concatenate(
+                    [req.prompt, np.asarray(req.tokens, np.int32)]
+                )[:int(sp.pos_host[req.slot])]
+                if len(path) >= self.prefix.min_len and not (
+                        (n := self.prefix.lookup(path)) is not None
+                        and n.snapshot is not None):
+                    self._snapshot_slot(sp, req.slot, path)
+            if req.seed_node is not None:
+                self.prefix.release(req.seed_node)
+                req.seed_node = None
+            # finished greedy outputs become exact-hit answers for repeats
+            self.prefix.result_store(req.prompt, req.max_new,
+                                     req.temperature, self.params_version,
+                                     req.output())
+        sp.active[req.slot] = None
         req.pool = req.slot = -1
         req.t_done = time.perf_counter()
         req.done.set()
+
+    def _finish_from_cache(self, req: Request, tokens: List[int]) -> None:
+        """Answer a request straight from the result cache: no slot, no
+        prefill, no decode — the first and last token land together."""
+        req.tokens = list(tokens)
+        now = time.perf_counter()
+        req.t_first = req.t_first or now
+        req.t_done = now
+        self.tokens_out += len(req.tokens)
+        req.done.set()
+
+    def _snapshot_slot(self, sp: SlotPool, slot: int, path) -> None:
+        """Capture one slot's pool row (jitted gather, measured as a
+        ``serve_snapshot`` job) and commit it into the radix tree under
+        ``path`` — the token prefix the slot has consumed so far."""
+        cold = ("snapshot",) not in self._compiled
+        self._compiled.add(("snapshot",))
+        snap_fn = build_row_snapshot(self.cfg)
+        job = Job("serve_snapshot", tokens=len(path), meta={"cold": cold})
+        pjob = Job(pool_kind("serve_snapshot", sp.pool_id),
+                   tokens=len(path), meta={"cold": cold})
+        row = self.engine.run_job(
+            job, lambda: jax.block_until_ready(snap_fn(sp.pool, slot)),
+            extra=(pjob,))
+        self.prefix.insert(path, snapshot=row)
 
     def _allowed_pools(self, req: Request) -> List[int]:
         if req.pin_pool is not None:
@@ -451,10 +584,30 @@ class ServeEngine:
         the emptiest pool wins (ties: lowest pool id).  Requests whose
         admissible pools are all full stay queued — in order, without
         blocking later requests bound for a free pool — via one linear
-        pass that rebuilds the queue."""
+        pass that rebuilds the queue.
+
+        Prefix cache (when enabled): an exact result-cache hit answers the
+        request here — it never takes a slot.  Otherwise a greedy request
+        looks up its longest snapshotted prompt prefix, and if the engine's
+        measured FRT comparison picks the seed path, the slot starts from
+        the snapshot: ``prompt_off``/``pos`` begin at the cached depth and
+        ``reset`` stays False (the seed write replaces the whole row, so no
+        stale state survives).  Sampled requests never seed: the plain arm
+        splits the slot's PRNG key once per scan step *including prefill
+        steps*, so skipping prefill would shift a sampled request's key
+        stream — greedy outputs ignore the key, which is exactly why the
+        bit-identicality claim holds.  All seed rows land in ONE jitted
+        batched write per pool (the join path's no-eager-scatter rule)."""
         joined: Dict[int, list] = {}
+        seeds: Dict[int, list] = {}
         remaining: Deque[Request] = deque()
         for req in self.queue:
+            if (self.prefix is not None and req.temperature <= 0
+                    and (out := self.prefix.result_lookup(
+                        req.prompt, req.max_new, req.temperature,
+                        self.params_version)) is not None):
+                self._finish_from_cache(req, out)
+                continue
             cands = [p for p in self._allowed_pools(req)
                      if self.pools[p].free_slots() > 0]
             if not cands:
@@ -465,8 +618,27 @@ class ServeEngine:
             slot = next(s for s in range(sp.slots) if sp.active[s] is None)
             req.pool, req.slot = pid, slot
             sp.active[slot] = req
-            sp.reset[slot] = True
-            sp.pos_host[slot] = 0
+            node = None
+            if self.prefix is not None and req.temperature <= 0:
+                # >= 1 prompt token must remain to produce the first logits
+                node = self.prefix.longest_match(req.prompt,
+                                                 limit=len(req.prompt) - 1)
+            if node is not None and self.engine.choose_prefix_admission(
+                    node.depth, len(req.prompt) - node.depth,
+                    pool_id=sp.pool_id) == "seed":
+                self.prefix.acquire(node)
+                req.seed_node = node
+                req.prompt_off = node.depth
+                sp.reset[slot] = False
+                sp.pos_host[slot] = node.depth
+                seeds.setdefault(pid, []).append((slot, node))
+                self.prefix.seeded += 1
+                self.prefix.tokens_avoided += node.depth
+            else:
+                if node is not None:
+                    self.prefix.seed_declined += 1
+                sp.reset[slot] = True
+                sp.pos_host[slot] = 0
             joined.setdefault(pid, []).append((slot, req))
         self.queue = remaining
         for pid, js in joined.items():
@@ -474,6 +646,23 @@ class ServeEngine:
             idx = jnp.asarray([s for s, _ in js], jnp.int32)
             sp.keys = sp.keys.at[idx].set(jnp.stack(
                 [req.key for _, req in js]))
+        for pid, ss in seeds.items():
+            sp = self.pools[pid]
+            idx = jnp.asarray([s for s, _ in ss], jnp.int32)
+            rows = jax.tree.map(lambda *rs: jnp.stack(rs),
+                                *[n.snapshot for _, n in ss])
+            new_pos = jnp.asarray([n.pos for _, n in ss], jnp.int32)
+            cold = ("seed", len(ss)) not in self._compiled
+            self._compiled.add(("seed", len(ss)))
+            seed_fn = build_seed_write(self.cfg)
+            depth = sum(n.depth for _, n in ss)
+            job = Job("serve_seed", tokens=depth, meta={"cold": cold})
+            pjob = Job(pool_kind("serve_seed", sp.pool_id), tokens=depth,
+                       meta={"cold": cold})
+            sp.pool, sp.pos = self.engine.run_job(
+                job, lambda: jax.block_until_ready(seed_fn(
+                    sp.pool, sp.pos, idx, rows, new_pos)),
+                extra=(pjob,))
 
     # -------------------------------------------------------------- control
     def _inspect(self, what: str) -> Dict[str, Any]:
@@ -484,6 +673,9 @@ class ServeEngine:
                          "ticks": self.spec_ticks,
                          "proposed": self.spec_proposed,
                          "accepted": self.spec_accepted},
+                "prefix_cache": (self.prefix.stats()
+                                 if self.prefix is not None
+                                 else {"enabled": False}),
                 "slots": [None if r is None else
                           {"rid": r.rid, "prompt_off": r.prompt_off,
                            "plen": len(r.prompt), "out": len(r.tokens),
@@ -508,6 +700,21 @@ class ServeEngine:
             self.prefill_chunk = int(updates["prefill_chunk"])
         if "spec_decode" in updates:
             self.spec_decode = bool(updates["spec_decode"])
+        if "prefix_cache" in updates:
+            on = bool(updates["prefix_cache"])
+            if on and self.prefix is None:
+                sc = self.cfg.serve
+                self.prefix = PrefixCache(sc.prefix_cache_nodes,
+                                          sc.prefix_min_len,
+                                          sc.result_cache_entries)
+            elif not on and self.prefix is not None:
+                # in-flight seeded requests keep their (host) refs on the
+                # dropped tree; nothing reads it again, so just detach
+                self.prefix = None
+        if "params_version" in updates:
+            # hot weight swap: new version keys the result cache so stale
+            # answers cannot serve (old entries age out of the LRU)
+            self.params_version = int(updates["params_version"])
 
     def _poll(self) -> bool:
         r = self.engine.poll(self.tick_no, 0, self._inspect)
@@ -762,6 +969,22 @@ class ServeEngine:
                 self._evict(r)
             else:
                 r.pending_tok = int(em[s, last - 1])
+        if self.prefix is not None and mode == "prefill":
+            # snapshot capture: a prefill tick boundary where the slot has
+            # consumed exactly a prompt prefix (no decode output fed back
+            # yet) is a reusable state — commit it into the radix tree
+            # unless that path already owns a snapshot.  The guard on
+            # pos_host == prompt_off excludes slots that transitioned to
+            # decode mid-tick: their rows hold generated tokens too.
+            for r in part:
+                if (r.pool < 0 or r.prompt_off < self.prefix.min_len
+                        or int(sp.pos_host[r.slot]) != r.prompt_off):
+                    continue
+                path = r.prompt[:r.prompt_off]
+                n = self.prefix.lookup(path)
+                if n is not None and n.snapshot is not None:
+                    continue
+                self._snapshot_slot(sp, r.slot, path)
         if spec:
             proposed = (L - 1) * len(part)
             accepted = int(sum(int(nv[s]) - 1 for s in part_slots))

@@ -63,7 +63,8 @@ class BatchedServer:
     def __init__(self, cfg: ArchConfig, params, max_len: int = 128,
                  slots: int = 4, prefill_chunk: int = 16,
                  decode_chunk: int = 4, spec_decode: bool = False,
-                 pools: int = 1, class_pools: Optional[Dict] = None):
+                 pools: int = 1, class_pools: Optional[Dict] = None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -73,6 +74,9 @@ class BatchedServer:
         self.spec_decode = spec_decode
         self.pools = pools
         self.class_pools = class_pools
+        # cross-request prefix cache + exact-hit result cache (cfg.serve
+        # knobs size it); greedy outputs stay bit-identical with it on
+        self.prefix_cache = prefix_cache
         self._step = None                # static-path jit, built on demand
         self._engine = None
 
@@ -84,7 +88,8 @@ class BatchedServer:
                 slots=self.slots, prefill_chunk=self.prefill_chunk,
                 decode_chunk=self.decode_chunk, seed=seed,
                 spec_decode=self.spec_decode, pools=self.pools,
-                class_pools=self.class_pools)
+                class_pools=self.class_pools,
+                prefix_cache=self.prefix_cache)
         return self._engine
 
     def submit(self, prompt, max_new: int = 16, temperature: float = 0.0,

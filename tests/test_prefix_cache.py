@@ -1,0 +1,338 @@
+"""Cross-request prefix cache + result cache: unit + engine-level tests.
+
+Three layers:
+
+* pure host-side data structures — radix insert / longest-match / split,
+  LRU eviction under refcount and pinning, request-fingerprint
+  canonicalization, the workload analyzer's hot-prefix mining;
+* the engine decision — ``Engine.choose_prefix_admission`` flips between
+  seed and prefill as the cooked CostBook EMAs move, bootstraps toward the
+  unmeasured seed arm, and re-explores a losing seed arm;
+* ServeEngine end-to-end — a shared-prefix workload seeds admissions and
+  stays bit-identical to the static oracle, exact repeats answer from the
+  result cache without taking a slot, sampled requests never seed or
+  store, and the counters surface through ``_inspect("prefix_cache")``.
+"""
+from functools import lru_cache
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_arch
+from repro.engine.engine import Engine
+from repro.engine.prefix_cache import (PrefixAnalyzer, PrefixCache,
+                                       request_fingerprint)
+from repro.engine.serve import ServeEngine
+from repro.models import lm
+from repro.runtime.serve import BatchedServer
+
+from conftest import PYTEST_SEED
+
+CFG = get_arch("gemma3-1b-smoke")
+MAX_LEN = 64
+
+
+@lru_cache(maxsize=None)
+def _fixture():
+    params = lm.init(CFG, jax.random.PRNGKey(0))
+    return params, BatchedServer(CFG, params, max_len=MAX_LEN)
+
+
+# ------------------------------------------------------------- fingerprint
+
+def test_fingerprint_canonicalizes_dtype_and_container():
+    toks = [3, 1, 4, 1, 5]
+    fps = {request_fingerprint(c, 8, 0.0, 0) for c in (
+        toks, tuple(toks), np.asarray(toks, np.int32),
+        np.asarray(toks, np.int64))}
+    assert len(fps) == 1
+
+
+def test_fingerprint_greedy_temperatures_collapse():
+    assert request_fingerprint([1, 2], 4, 0.0, 0) == \
+        request_fingerprint([1, 2], 4, -1.0, 0)
+
+
+def test_fingerprint_sampled_is_uncacheable():
+    assert request_fingerprint([1, 2], 4, 0.7, 0) is None
+
+
+def test_fingerprint_params_version_keys():
+    assert request_fingerprint([1, 2], 4, 0.0, 0) != \
+        request_fingerprint([1, 2], 4, 0.0, 1)
+
+
+def test_fingerprint_max_new_not_in_key():
+    assert request_fingerprint([1, 2], 4, 0.0, 0) == \
+        request_fingerprint([1, 2], 99, 0.0, 0)
+
+
+# ------------------------------------------------------------ result cache
+
+def test_result_cache_truncation_hit_and_short_miss():
+    pc = PrefixCache(min_len=2)
+    pc.result_store([1, 2, 3], 8, 0.0, 0, [10, 11, 12, 13, 14, 15, 16, 17])
+    # shorter request answered by truncation (greedy is prefix-stable)
+    assert pc.result_lookup([1, 2, 3], 5, 0.0, 0) == [10, 11, 12, 13, 14]
+    # a LONGER request is not answerable by the stored continuation
+    assert pc.result_lookup([1, 2, 3], 9, 0.0, 0) is None
+    # sampled requests miss even on an identical prompt
+    assert pc.result_lookup([1, 2, 3], 5, 0.9, 0) is None
+    # a different params version must miss (stale weights)
+    assert pc.result_lookup([1, 2, 3], 5, 0.0, 1) is None
+
+
+def test_result_cache_longer_replaces_shorter():
+    pc = PrefixCache(min_len=2)
+    pc.result_store([7], 2, 0.0, 0, [1, 2])
+    assert pc.result_lookup([7], 4, 0.0, 0) is None
+    pc.result_store([7], 4, 0.0, 0, [1, 2, 3, 4])
+    assert pc.result_lookup([7], 4, 0.0, 0) == [1, 2, 3, 4]
+    # and the shorter store does NOT clobber the longer entry
+    pc.result_store([7], 2, 0.0, 0, [1, 2])
+    assert pc.result_lookup([7], 4, 0.0, 0) == [1, 2, 3, 4]
+
+
+def test_result_cache_sampled_never_stores():
+    pc = PrefixCache(min_len=2)
+    assert not pc.result_store([1], 4, 0.9, 0, [5, 6, 7, 8])
+    assert pc.result_lookup([1], 4, 0.0, 0) is None
+
+
+def test_result_cache_lru_bound():
+    pc = PrefixCache(min_len=2, result_entries=2)
+    for i in range(4):
+        pc.result_store([i], 1, 0.0, 0, [i])
+    assert pc.result_lookup([0], 1, 0.0, 0) is None   # aged out
+    assert pc.result_lookup([3], 1, 0.0, 0) == [3]
+
+
+# -------------------------------------------------------------- radix tree
+
+def test_radix_insert_longest_match_and_split():
+    pc = PrefixCache(min_len=2)
+    pc.insert([1, 2, 3, 4], snapshot="s4")
+    pc.insert([1, 2, 3, 4, 5, 6], snapshot="s6")
+    # divergence inside the compressed [5, 6] edge forces a split
+    pc.insert([1, 2, 3, 4, 5, 9], snapshot="alt")
+    assert pc.longest_match([1, 2, 3, 4, 5, 6, 7, 8]).snapshot == "s6"
+    assert pc.longest_match([1, 2, 3, 4, 5, 9, 9]).snapshot == "alt"
+    # limit: a snapshot consuming the whole query is not a usable seed
+    assert pc.longest_match([1, 2, 3, 4], limit=3) is None
+    assert pc.longest_match([1, 2, 3, 4, 9], limit=4).snapshot == "s4"
+    # disjoint prompt: miss
+    assert pc.longest_match([9, 9, 9, 9]) is None
+    assert pc.misses == 2 and pc.hits == 3
+
+
+def test_radix_min_len_rejects_short_paths():
+    pc = PrefixCache(min_len=4)
+    assert pc.insert([1, 2, 3], snapshot="x") is None
+    assert pc.snapshots == 0
+
+
+def test_radix_lookup_exact_no_counters():
+    pc = PrefixCache(min_len=2)
+    pc.insert([1, 2, 3], snapshot="s")
+    assert pc.lookup([1, 2, 3]).snapshot == "s"
+    assert pc.lookup([1, 2]) is None        # interior of a compressed edge
+    assert pc.hits == 0 and pc.misses == 0
+
+
+def test_lru_eviction_order():
+    pc = PrefixCache(capacity=2, min_len=2)
+    pc.insert([1, 1, 1], snapshot="a")
+    pc.insert([2, 2, 2], snapshot="b")
+    pc.longest_match([1, 1, 1, 9])          # touch "a" -> "b" is now LRU
+    pc.insert([3, 3, 3], snapshot="c")
+    assert pc.evictions == 1
+    assert pc.lookup([2, 2, 2]) is None     # evicted AND pruned
+    assert pc.longest_match([1, 1, 1, 9]).snapshot == "a"
+    assert pc.snapshots == 2
+
+
+def test_refcount_blocks_eviction():
+    pc = PrefixCache(capacity=1, min_len=2)
+    n = pc.insert([1, 1, 1], snapshot="a")
+    pc.acquire(n)
+    pc.insert([2, 2, 2], snapshot="b")      # over capacity, "a" is pinned
+    # "b" itself is evictable, so capacity recovers by dropping it; "a"
+    # (referenced) must survive
+    assert pc.lookup([1, 1, 1]).snapshot == "a"
+    pc.release(n)
+    pc.insert([3, 3, 3], snapshot="c")
+    assert pc.lookup([1, 1, 1]) is None     # refs drained -> evictable
+
+
+def test_all_protected_runs_over_capacity():
+    pc = PrefixCache(capacity=1, min_len=2)
+    a = pc.insert([1, 1, 1], snapshot="a")
+    pc.acquire(a)                            # in-flight seed
+    pc.pin([2, 2, 2])
+    pc.insert([2, 2, 2], snapshot="b")       # born pinned
+    # nothing evictable: the bound is deliberately exceeded rather than
+    # corrupting an in-flight seed or dropping a pinned prefix
+    assert pc.snapshots == 2
+    assert pc.lookup([1, 1, 1]).snapshot == "a"
+    assert pc.lookup([2, 2, 2]).snapshot == "b"
+
+
+def test_pin_blocks_eviction_and_pre_pins_future_snapshot():
+    pc = PrefixCache(capacity=1, min_len=2)
+    pc.pin([1, 1, 1])                        # path not in the tree yet
+    pc.insert([1, 1, 1], snapshot="a")       # born pinned
+    pc.insert([2, 2, 2], snapshot="b")
+    assert pc.lookup([1, 1, 1]).snapshot == "a"
+    assert pc.pinned == 1
+
+
+# ---------------------------------------------------------------- analyzer
+
+def test_analyzer_mines_hot_prefixes_on_grid():
+    an = PrefixAnalyzer(min_len=2, pin_count=3, history=100)
+    shared = (5, 6, 7, 8, 9)
+    for i in range(3):
+        an.record(shared + (100 + i,))       # shared 5-token preamble
+    an.record((1, 2, 3))                     # noise, seen once
+    hot = an.hot_prefixes()
+    assert shared[:4] in hot and shared[:2] in hot   # grid: 2, 4
+    assert (1, 2) not in hot
+    # longest first: pinning the deepest shared run dominates
+    assert hot[0] == shared[:4]
+
+
+def test_analyzer_sliding_window_expires():
+    an = PrefixAnalyzer(min_len=2, pin_count=3, history=4)
+    for _ in range(3):
+        an.record((1, 2, 3))
+    assert (1, 2) in an.hot_prefixes()
+    for _ in range(4):
+        an.record((7, 8, 9))                 # push the window past the 1s
+    assert (1, 2) not in an.hot_prefixes()
+
+
+# ---------------------------------------------------------- engine decision
+
+def test_choose_prefix_admission_bootstraps_seed():
+    eng = Engine()
+    assert eng.choose_prefix_admission(8, 2) == "seed"
+    assert eng.decisions[-1]["why"] == "bootstrap"
+
+
+def test_choose_prefix_admission_tracks_cooked_emas():
+    eng = Engine()
+    # cheap copy, expensive per-token prefill: seeding 30 cached tokens
+    # beats recomputing them
+    eng.costs.observe("serve_seed", 0.001)
+    eng.costs.observe("serve_prefill_per_tok", 0.010)
+    assert eng.choose_prefix_admission(30, 4) == "seed", eng.decisions[-1]
+    # expensive copy, cheap prefill: recomputing 5 tokens beats the copy
+    eng2 = Engine()
+    eng2.costs.observe("serve_seed", 1.0)
+    eng2.costs.observe("serve_prefill_per_tok", 0.0001)
+    assert eng2.choose_prefix_admission(5, 4) == "prefill"
+
+
+def test_choose_prefix_admission_reexplores_losing_seed_arm():
+    eng = Engine()
+    eng.costs.observe("serve_seed", 1.0)
+    eng.costs.observe("serve_prefill_per_tok", 0.0001)
+    picks = [eng.choose_prefix_admission(5, 4) for _ in range(16)]
+    assert picks.count("seed") == 1          # the forced 16th-round explore
+    assert picks[:15] == ["prefill"] * 15
+
+
+# --------------------------------------------------------- engine end-to-end
+
+def _oracle(prompt, max_new):
+    _, srv = _fixture()
+    return srv.generate_static(np.asarray(prompt, np.int32)[None],
+                               max_new=int(max_new))[0]
+
+
+def test_serve_prefix_cache_seeds_and_stays_bit_identical():
+    params, _ = _fixture()
+    rng = np.random.default_rng(PYTEST_SEED + 31)
+    shared = rng.integers(1, CFG.vocab, 12).astype(np.int32)
+    prompts = [np.concatenate([shared,
+                               rng.integers(1, CFG.vocab, 3).astype(np.int32)])
+               for _ in range(5)]
+    eng = ServeEngine(CFG, params, max_len=MAX_LEN, slots=2,
+                      prefill_chunk=4, decode_chunk=2, prefix_cache=True)
+    reqs = [eng.submit(p, max_new=5) for p in prompts]
+    eng.run_until_done()
+    for i, (p, r) in enumerate(zip(prompts, reqs)):
+        np.testing.assert_array_equal(r.output(), _oracle(p, 5),
+                                      err_msg=f"req {i}")
+    st = eng._inspect("prefix_cache")["prefix_cache"]
+    assert st["enabled"] and st["seeded"] >= 1
+    assert st["tokens_avoided"] >= st["seeded"] * CFG.serve.prefix_min_len
+    assert st["snapshots"] >= 1
+
+
+def test_serve_exact_repeat_hits_result_cache_without_slot():
+    params, _ = _fixture()
+    rng = np.random.default_rng(PYTEST_SEED + 32)
+    prompt = rng.integers(1, CFG.vocab, 7).astype(np.int32)
+    eng = ServeEngine(CFG, params, max_len=MAX_LEN, slots=2,
+                      prefill_chunk=4, decode_chunk=2, prefix_cache=True)
+    r1 = eng.submit(prompt, max_new=6)
+    eng.run_until_done()
+    ticks_before = eng.tick_no
+    r2 = eng.submit(prompt, max_new=6)       # exact repeat
+    r3 = eng.submit(prompt, max_new=4)       # shorter: truncation hit
+    eng.run_until_done()
+    np.testing.assert_array_equal(r2.output(), r1.output())
+    np.testing.assert_array_equal(r3.output(), r1.output()[:4])
+    st = eng._inspect("prefix_cache")["prefix_cache"]
+    assert st["result_hits"] == 2
+    # a result hit never occupies a slot, so no tick ran any model work
+    # (idle ticks do not advance tick_no)
+    assert eng.tick_no == ticks_before
+
+
+def test_serve_sampled_requests_never_seed_or_store():
+    params, _ = _fixture()
+    rng = np.random.default_rng(PYTEST_SEED + 33)
+    prompt = rng.integers(1, CFG.vocab, 8).astype(np.int32)
+    eng = ServeEngine(CFG, params, max_len=MAX_LEN, slots=2,
+                      prefill_chunk=4, decode_chunk=2, prefix_cache=True)
+    eng.submit(prompt, max_new=4, temperature=0.8)
+    eng.run_until_done()
+    eng.submit(prompt, max_new=4, temperature=0.8)
+    eng.run_until_done()
+    st = eng._inspect("prefix_cache")["prefix_cache"]
+    assert st["seeded"] == 0 and st["result_hits"] == 0
+    assert st["result_entries"] == 0
+
+
+def test_serve_prefix_cache_hot_toggle():
+    params, _ = _fixture()
+    rng = np.random.default_rng(PYTEST_SEED + 34)
+    prompt = rng.integers(1, CFG.vocab, 8).astype(np.int32)
+    eng = ServeEngine(CFG, params, max_len=MAX_LEN, slots=2,
+                      prefill_chunk=4, decode_chunk=2)
+    assert eng._inspect("x")["prefix_cache"] == {"enabled": False}
+    eng._apply_updates({"prefix_cache": True})
+    r = eng.submit(prompt, max_new=4)
+    eng.run_until_done()
+    np.testing.assert_array_equal(r.output(), _oracle(prompt, 4))
+    assert eng._inspect("x")["prefix_cache"]["enabled"]
+    eng._apply_updates({"prefix_cache": False})
+    assert eng._inspect("x")["prefix_cache"] == {"enabled": False}
+
+
+def test_serve_params_version_update_keys_result_cache():
+    params, _ = _fixture()
+    rng = np.random.default_rng(PYTEST_SEED + 35)
+    prompt = rng.integers(1, CFG.vocab, 7).astype(np.int32)
+    eng = ServeEngine(CFG, params, max_len=MAX_LEN, slots=2,
+                      prefill_chunk=4, decode_chunk=2, prefix_cache=True)
+    eng.submit(prompt, max_new=4)
+    eng.run_until_done()
+    eng._apply_updates({"params_version": 1})   # simulated weight swap
+    eng.submit(prompt, max_new=4)
+    eng.run_until_done()
+    st = eng._inspect("x")["prefix_cache"]
+    assert st["result_hits"] == 0               # old answers must not serve

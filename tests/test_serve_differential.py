@@ -7,7 +7,9 @@ join/evict pressure (more requests than slots), control-message
 interleavings delivered between ticks, and hot config updates — and asserts
 that ``ServeEngine`` greedy outputs are **bit-identical** to the static
 ``BatchedServer.generate_static`` oracle across ``compact_decode`` ×
-``spec_decode`` × ``pools`` (multi-pool runs take the weighted-FRT
+``spec_decode`` × ``prefix_cache`` × ``pools`` (scenarios mix a shared
+prompt preamble in so the prefix-cache axis exercises seeded admissions
+and result-cache hits, not just the miss path; multi-pool runs take the weighted-FRT
 ``choose_serve_job`` arbitration; the priority-class-specific paths are
 pinned separately in tests/test_serve_priority.py).  Speculative decode makes this the load-bearing test: its
 acceptance mask must commit exactly the tokens plain greedy decode would
@@ -84,18 +86,34 @@ def _ctl_batch(ctl, kind, rng):
         ctl.send(M.update(spec_decode=bool(rng.integers(2))))
 
 
+def _gen_prompts(rng, n_req):
+    """Random prompts, with a scenario-level shared preamble mixed in so
+    the prefix-cache axis actually exercises seeded admissions (fully
+    disjoint random prompts would never produce a radix hit)."""
+    shared = rng.integers(1, CFG.vocab,
+                          int(rng.integers(0, 9))).astype(np.int32)
+    prompts = []
+    for _ in range(n_req):
+        tail = rng.integers(1, CFG.vocab,
+                            int(rng.integers(1, 13))).astype(np.int32)
+        prompts.append(np.concatenate([shared, tail])
+                       if shared.size and rng.integers(2) else tail)
+    return prompts
+
+
 def gen_scenario(rng):
     n_req = int(rng.integers(1, 6))
     return {
-        "prompts": [rng.integers(1, CFG.vocab,
-                                 int(rng.integers(1, 13))).astype(np.int32)
-                    for _ in range(n_req)],
+        "prompts": _gen_prompts(rng, n_req),
         "max_news": [int(rng.integers(1, 9)) for _ in range(n_req)],
         "slots": int(rng.choice(SLOTS)),
         "prefill_chunk": int(rng.choice(PREFILL_CHUNKS)),
         "decode_chunk": int(rng.choice(DECODE_CHUNKS)),
         "compact": bool(rng.integers(2)),
         "spec": bool(rng.integers(2)),
+        # cross-request prefix cache + result cache: seeded admissions and
+        # exact-hit answers must leave greedy outputs bit-identical
+        "prefix_cache": bool(rng.integers(2)),
         # 1 pool -> the legacy single-pool decision path; 2 pools -> the
         # weighted multi-pool arbitration.  Pool slot counts stay inside
         # SLOTS, so no new tick-jit specializations enter the sweep.
@@ -114,7 +132,8 @@ def run_scenario(sc):
                       prefill_chunk=sc["prefill_chunk"],
                       decode_chunk=sc["decode_chunk"],
                       compact_decode=sc["compact"],
-                      spec_decode=sc["spec"], pools=sc.get("pools", 1))
+                      spec_decode=sc["spec"], pools=sc.get("pools", 1),
+                      prefix_cache=sc.get("prefix_cache", False))
     reqs = [eng.submit(p, max_new=n)
             for p, n in zip(sc["prompts"], sc["max_news"])]
     ctl_rng = np.random.default_rng(sc["ctl_seed"])
@@ -133,6 +152,7 @@ def run_scenario(sc):
                      f" pc={sc['prefill_chunk']} dc={sc['decode_chunk']}"
                      f" compact={sc['compact']} spec={sc['spec']}"
                      f" pools={sc.get('pools', 1)}"
+                     f" prefix_cache={sc.get('prefix_cache', False)}"
                      f" schedule={sc['schedule']}"))
     return eng
 
@@ -190,12 +210,21 @@ if HAVE_HYPOTHESIS:
     @given(data=st.data())
     def test_differential_hypothesis(data):
         n_req = data.draw(st.integers(1, 5), label="n_req")
+        shared = np.asarray(
+            data.draw(st.lists(st.integers(1, CFG.vocab - 1),
+                               min_size=0, max_size=8), label="shared"),
+            np.int32)
         sc = {
-            "prompts": [np.asarray(
-                data.draw(st.lists(st.integers(1, CFG.vocab - 1),
-                                   min_size=1, max_size=12),
-                          label=f"prompt_{i}"), np.int32)
-                for i in range(n_req)],
+            "prompts": [
+                (np.concatenate([shared, tail])
+                 if shared.size and data.draw(st.booleans(),
+                                              label=f"extend_{i}")
+                 else tail)
+                for i in range(n_req)
+                for tail in [np.asarray(
+                    data.draw(st.lists(st.integers(1, CFG.vocab - 1),
+                                       min_size=1, max_size=12),
+                              label=f"prompt_{i}"), np.int32)]],
             "max_news": [data.draw(st.integers(1, 8), label=f"max_new_{i}")
                          for i in range(n_req)],
             "slots": data.draw(st.sampled_from(SLOTS), label="slots"),
@@ -205,6 +234,7 @@ if HAVE_HYPOTHESIS:
                                       label="decode_chunk"),
             "compact": data.draw(st.booleans(), label="compact"),
             "spec": data.draw(st.booleans(), label="spec"),
+            "prefix_cache": data.draw(st.booleans(), label="prefix_cache"),
             "pools": data.draw(st.integers(1, 2), label="pools"),
             "schedule": data.draw(
                 st.dictionaries(st.integers(0, 6),
