@@ -69,7 +69,7 @@ step_costs = {k: round(v, 4) for k, v in loop.engine.costs.snapshot().items()
 print(f"engine jobs: {loop.engine.jobs_run}; measured step costs (s): "
       f"{step_costs}")
 print(f"step-path decisions tail: "
-      f"{[d['choice'] for d in loop.engine.decisions[-5:]]} "
+      f"{[d['choice'] for d in list(loop.engine.decisions)[-5:]]} "
       f"(granulated while interactivity was live, fused while idle)")
 
 # ---- crash & recover ------------------------------------------------------

@@ -76,33 +76,78 @@ th.join()
 done = eng.tokens_out
 print(f"\nstream finished under control: {done} tokens over {eng.tick_no} "
       f"ticks; decisions tail: "
-      f"{[d['choice'] for d in eng.engine.decisions[-6:]]}")
+      f"{[d['choice'] for d in list(eng.engine.decisions)[-6:]]}")
 
-# ---- speculative in-tick decoding ----------------------------------------
+# ---- speculative in-tick decoding: the n-gram proposer --------------------
 # a per-slot n-gram suffix table (living in the donated pool) drafts up to
 # cfg.serve.spec_len tokens per decode tick; the tick scan verifies them and
 # commits the longest accepted prefix (greedy outputs bit-identical).  The
-# plain-vs-spec arm is an engine decision from the measured acceptance EMA.
+# decode arm — plain vs one of the spec proposers — is an engine decision
+# from measured per-arm acceptance + runtime EMAs.
 eng = ServeEngine(cfg, params, max_len=160, slots=2, prefill_chunk=8,
                   decode_chunk=4, spec_decode=True)
-# pin the arm on for the demo (auto mode lets the CostBook decide, and on
-# CPU smoke scale the measured decision usually keeps plain — see
-# bench_serve_spec); forcing it shows the acceptance machinery learning
+# pin the arm on for the demo (auto mode lets the CostBook decide; the
+# n-gram table only pays off on repetitive traffic — see bench_serve_spec);
+# forcing it shows the acceptance machinery learning
 _choose = eng.engine.choose_serve_tick
 eng.engine.choose_serve_tick = lambda *a, **k: (
-    "spec" if _choose(*a, **k) == "decode" and k.get("spec_len", 0) > 1
+    "spec:ngram" if _choose(*a, **k) == "decode" and k.get("spec_len", 0) > 1
     else _choose(*a, **k))
 for _ in range(2):
     eng.submit(np.random.default_rng(1).integers(
         1, cfg.vocab, (8,)).astype(np.int32), max_new=48)
 eng.run_until_done()
 acc = eng.spec_accepted / max(eng.spec_proposed, 1)
-print(f"\nspeculative decode (arm pinned on): {eng.spec_ticks} spec ticks, "
-      f"acceptance={acc:.2f} ({eng.spec_accepted}/{eng.spec_proposed} "
+print(f"\nspeculative decode (ngram arm pinned on): {eng.spec_ticks} spec "
+      f"ticks, acceptance={acc:.2f} ({eng.spec_accepted}/{eng.spec_proposed} "
       f"drafts); the auto decision from these measurements would be: "
-      f"{[d['choice'] for d in eng.engine.decisions[-2:]]}; "
+      f"{[d['choice'] for d in list(eng.engine.decisions)[-2:]]}; "
       f"accept EMA keys: "
       f"{[k for k in eng.engine.costs.snapshot() if 'accept' in k]}")
+
+# ---- speculative decoding: the draft-model proposer -----------------------
+# the second proposer family member: a tiny independent draft model decodes
+# ahead of the target (per-slot draft cache rows live in the donated pool,
+# shadowing every arm so draft state always equals the committed stream).
+# distill_draft trains it on the target's own greedy streams in seconds;
+# update(draft_params=...) hot-republishes a fresher draft mid-stream, and
+# because the target verifies every position a wrong/stale draft can only
+# lower acceptance, never change tokens.  This is the arm that wins on
+# non-repetitive traffic, where the n-gram table has nothing to match.
+from repro.engine import distill_draft, small_draft_cfg
+
+dcfg = small_draft_cfg(cfg)
+train_prompts = [rng.integers(1, cfg.vocab, (8,)).astype(np.int32)
+                 for _ in range(6)]
+t0 = time.time()
+dparams = distill_draft(cfg, params, dcfg, train_prompts, max_new=48,
+                        steps=300)
+print(f"\ndistilled {dcfg.name} in {time.time() - t0:.1f}s")
+eng = ServeEngine(cfg, params, max_len=160, slots=2, prefill_chunk=8,
+                  decode_chunk=4, spec_decode=True, draft_cfg=dcfg,
+                  draft_params=dparams)
+_choose = eng.engine.choose_serve_tick
+eng.engine.choose_serve_tick = lambda *a, **k: (
+    "spec:draft" if _choose(*a, **k) == "decode" and k.get("spec_len", 0) > 1
+    else _choose(*a, **k))
+for p in train_prompts[:2]:
+    eng.submit(p, max_new=48)
+eng.run_until_done()
+st = eng.spec_arms.get("draft", {})
+print(f"draft arm: {st.get('ticks', 0)} spec ticks, acceptance="
+      f"{st.get('accepted', 0) / max(st.get('proposed', 1), 1):.2f} "
+      f"({st.get('accepted', 0)}/{st.get('proposed', 0)} drafts)")
+# hot-republish mid-stream: even a garbage draft cannot change outputs
+ctl = eng.engine.controller
+for p in train_prompts[2:4]:
+    eng.submit(p, max_new=24)
+eng.tick()
+ctl.send(M.update(draft_params=jax.tree.map(lambda x: -x, dparams))).wait(60)
+eng.run_until_done()
+st = eng.spec_arms["draft"]
+print(f"after garbage hot-swap: acceptance fell to "
+      f"{st['accepted'] / max(st['proposed'], 1):.2f} cumulative — "
+      f"throughput cost, never a correctness cost")
 
 # ---- priority classes over multiple slot pools ----------------------------
 # two traffic classes (interactive "hi" outweighs batch "lo" 8:1, lo's
@@ -128,7 +173,7 @@ print(f"\npriority serving: hi ttft="
       f"{[f'{(r.t_first - r.t_submit) * 1e3:.0f}ms' for r in hi]}, "
       f"lo max_deferred={[r.max_deferred for r in lo]} (bound 4); "
       f"last decisions: "
-      f"{[d['choice'] for d in eng.engine.decisions[-3:]]}")
+      f"{[d['choice'] for d in list(eng.engine.decisions)[-3:]]}")
 
 # ---- cross-request prefix cache + result cache ----------------------------
 # requests sharing a system-prompt-style preamble: wave 1 prefills from

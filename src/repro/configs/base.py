@@ -87,6 +87,11 @@ class ServeCfg:
     spec_table: int = 512
     # n-gram context length (tokens hashed to index the table).
     spec_ctx: int = 2
+    # truncated self-draft depth: ServeEngine(draft="self") builds the draft
+    # proposer from the serve model's own first ``draft_layers`` blocks plus
+    # the shared embedding/head (no extra weights to ship).  An independent
+    # small draft is passed explicitly via draft_cfg/draft_params instead.
+    draft_layers: int = 2
     # priority traffic classes, in declaration order; the FIRST entry is the
     # default class for requests submitted without an explicit priority.
     classes: Tuple[PriorityClass, ...] = (PriorityClass(),)

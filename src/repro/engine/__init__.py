@@ -9,20 +9,26 @@ snapshots plus an exact-hit result cache, consulted at admission through a
 measured FRT decision.  ``runtime.loop`` and ``runtime.serve`` are clients
 of this layer.
 """
+from repro.engine.draft import (distill_draft, slice_draft_params,
+                                small_draft_cfg, truncated_draft_cfg)
 from repro.engine.engine import Engine
 from repro.engine.jobs import (Job, TickCandidate, accept_kind,
-                               checkpoint_workflow, pool_kind,
+                               checkpoint_workflow, layout_kind, pool_kind,
                                prefill_workflow, prefix_seed_workflow,
                                serve_decode_workflow, serve_tick_workflow,
-                               train_step_workflow)
+                               spec_kind, train_step_workflow)
 from repro.engine.prefix_cache import (PrefixAnalyzer, PrefixCache,
                                        request_fingerprint)
-from repro.engine.serve import (Request, ServeEngine, SlotPool,
+from repro.engine.serve import (PROPOSERS, DraftProposer, NgramProposer,
+                                Proposer, Request, ServeEngine, SlotPool,
                                 build_slot_tick)
 
-__all__ = ["Engine", "Job", "PrefixAnalyzer", "PrefixCache", "Request",
+__all__ = ["DraftProposer", "Engine", "Job", "NgramProposer", "PROPOSERS",
+           "PrefixAnalyzer", "PrefixCache", "Proposer", "Request",
            "ServeEngine", "SlotPool", "TickCandidate", "accept_kind",
-           "build_slot_tick", "checkpoint_workflow", "pool_kind",
-           "prefill_workflow", "prefix_seed_workflow",
-           "request_fingerprint", "serve_decode_workflow",
-           "serve_tick_workflow", "train_step_workflow"]
+           "build_slot_tick", "checkpoint_workflow", "distill_draft",
+           "layout_kind", "pool_kind", "prefill_workflow",
+           "prefix_seed_workflow", "request_fingerprint",
+           "serve_decode_workflow", "serve_tick_workflow",
+           "slice_draft_params", "small_draft_cfg", "spec_kind",
+           "train_step_workflow", "truncated_draft_cfg"]

@@ -1,0 +1,180 @@
+"""Draft models for the speculative serve tick (ROADMAP item 4b).
+
+The speculative tick's accept/commit machinery is proposer-agnostic: any
+source of a ``spec_len``-token draft chain works, because the target model
+verifies every position and the carried ``valid`` mask freezes state past
+the first mismatch (``engine.serve.build_slot_tick``).  This module supplies
+the *draft-model* proposer family — a second, much smaller parameter set
+that decodes ahead of the target:
+
+* **truncated self-draft** (``truncated_draft_cfg`` + ``slice_draft_params``)
+  — the serve model's own first ``cfg.serve.draft_layers`` blocks plus the
+  shared embedding/head.  Zero extra weights to ship or train; its agreement
+  with the full model is a property of the trained checkpoint (layer
+  truncation approximates a trained residual stack, so on the random-init
+  smoke models used in tests its acceptance is ~0 — which the harness uses
+  deliberately to exercise the all-reject path).
+
+* **independent small draft** (``small_draft_cfg``) — a separately-specified
+  tiny config over the same vocab (default: 1 block of the target's leading
+  pattern type at d_model 32 — ~7% of the smoke target's per-step cost).
+  ``distill_draft`` trains it by cross-entropy on the target's own greedy
+  streams (the draft's only job is to predict the target's argmax, so the
+  target is the perfect teacher and a few hundred AdamW steps on a few
+  streams reach >0.9 argmax agreement at smoke scale).
+
+Either way the draft's correctness burden is zero: a wrong, stale, or
+mid-stream hot-swapped draft can only lower acceptance, never change
+output tokens — the target's argmax is what commits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.optim import adamw
+
+# model param groups that are not stacked per-block and are shared with any
+# truncation of the layer pattern (the "shared head" of a self-draft)
+_SHARED_KEYS = ("embed", "final_ln", "lm_head")
+
+
+def truncated_draft_cfg(cfg: ArchConfig,
+                        layers: Optional[int] = None) -> ArchConfig:
+    """The self-draft config: the first ``layers`` blocks of ``cfg``'s
+    pattern (default ``cfg.serve.draft_layers``) with every dimension kept —
+    the draft IS the target's own bottom, so its params are slices of the
+    target's (``slice_draft_params``) and a weight update republishes both
+    from one tree."""
+    layers = int(cfg.serve.draft_layers if layers is None else layers)
+    assert 1 <= layers < cfg.num_layers, \
+        f"draft_layers={layers} must be in [1, {cfg.num_layers})"
+    pat = cfg.pattern[:layers]
+    assert "enc" not in pat and "dec" not in pat, \
+        "self-draft only truncates decoder-only patterns"
+    return dataclasses.replace(cfg, name=f"{cfg.name}-selfdraft{layers}",
+                               num_layers=layers, layer_pattern=pat,
+                               enc_layers=0)
+
+
+def slice_draft_params(params, cfg: ArchConfig,
+                       draft_cfg: ArchConfig):
+    """Materialize the truncated self-draft's parameter tree from the target
+    tree: per-block-type stacks keep their first ``count-in-prefix`` rows
+    (pattern order is preserved by truncation, so the prefix's occurrences
+    of a type are exactly the leading rows of its stack), shared-head groups
+    are reused as-is.  Returns new arrays (``lax.slice``), so donating or
+    updating the target tree cannot alias the draft."""
+    counts: dict = {}
+    for t in draft_cfg.pattern:
+        counts[t] = counts.get(t, 0) + 1
+    out = {k: params[k] for k in _SHARED_KEYS if k in params}
+    for t, n in counts.items():
+        if t == "shared_attn":
+            out[t] = params[t]             # single shared copy, not stacked
+            continue
+        out[t] = jax.tree.map(
+            lambda x: jax.lax.slice_in_dim(x, 0, n), params[t])
+    return out
+
+
+def small_draft_cfg(cfg: ArchConfig, layers: int = 1, d_model: int = 32,
+                    n_heads: int = 2) -> ArchConfig:
+    """An independently-sized draft config over the target's vocab: the
+    leading ``layers`` entries of the target's pattern at a much smaller
+    width (the smoke default is ~7% of the target's per-decode-step cost,
+    measured).  Pair with :func:`distill_draft` or externally-trained
+    weights."""
+    pat = cfg.pattern[:layers]
+    return dataclasses.replace(
+        cfg, name=f"{cfg.name}-draft{layers}x{d_model}",
+        num_layers=layers, layer_pattern=pat, d_model=d_model,
+        n_heads=n_heads, n_kv_heads=1, head_dim=d_model // n_heads,
+        d_ff=2 * d_model, enc_layers=0)
+
+
+def greedy_streams(cfg: ArchConfig, params,
+                   prompts: Sequence[np.ndarray], max_new: int = 64,
+                   max_len: int = 160) -> List[np.ndarray]:
+    """Teacher streams for distillation: each prompt plus the target's
+    greedy continuation, rolled out one jitted batched scan (prompts must
+    share one length)."""
+    P = len(prompts[0])
+    assert all(len(p) == P for p in prompts), "prompts must share a length"
+    batch = jnp.asarray(np.stack(prompts), jnp.int32)         # [B, P]
+
+    def roll(params, toks):
+        state = lm.init_cache(cfg, toks.shape[0], max_len)
+
+        def pre(st, t):
+            logits, st = lm.decode_step(params, st, t[:, None], cfg)
+            return st, logits
+
+        st, pre_logits = jax.lax.scan(pre, state, toks.T)
+
+        def dec(carry, _):
+            st, logits = carry
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)    # [B]
+            logits, st = lm.decode_step(params, st, nxt[:, None], cfg)
+            return (st, logits), nxt
+
+        _, out = jax.lax.scan(dec, (st, pre_logits[-1]), None,
+                              length=max_new)
+        return out.T                                          # [B, max_new]
+
+    gen = np.asarray(jax.jit(roll)(params, batch))
+    return [np.concatenate([np.asarray(p, np.int32), g])
+            for p, g in zip(prompts, gen)]
+
+
+def distill_draft(cfg: ArchConfig, params, draft_cfg: ArchConfig,
+                  prompts: Sequence[np.ndarray], max_new: int = 64,
+                  steps: int = 400, batch: int = 16, seq: int = 24,
+                  stride: int = 4, lr: float = 3e-3, seed: int = 7,
+                  max_len: int = 160):
+    """Train a draft to imitate the target's greedy stream (cross-entropy on
+    next-token over windows of the teacher streams) and return its params.
+
+    This is deliberately cheap — a few seconds at smoke scale — because the
+    draft only has to match the target's *argmax on its own traffic*, not
+    model language: measured on the smoke config, ~400 steps on 7 streams
+    reach 0.94-1.0 argmax agreement.  Serving keeps running while a newer
+    draft distills; ``ServeEngine`` republishes it mid-stream via
+    ``update(draft_params=...)`` without dropping requests."""
+    streams = greedy_streams(cfg, params, prompts, max_new, max_len)
+    xs, ys = [], []
+    for st in streams:
+        arr = np.asarray(st, np.int32)
+        for i in range(0, len(arr) - seq, stride):
+            xs.append(arr[i:i + seq])
+            ys.append(arr[i + 1:i + seq + 1])
+    X, Y = np.stack(xs), np.stack(ys)
+
+    dparams = lm.init(draft_cfg, jax.random.PRNGKey(seed))
+    ocfg = adamw.AdamWCfg(lr=lr, warmup_steps=max(steps // 20, 1),
+                          total_steps=steps, weight_decay=0.0)
+    ostate = adamw.init(dparams)
+
+    def loss_fn(p, x, y):
+        logits, _ = lm.forward(p, {"tokens": x}, draft_cfg)
+        ll = jax.nn.log_softmax(logits, -1)
+        return -jnp.take_along_axis(ll, y[..., None], -1).mean()
+
+    @jax.jit
+    def train_step(p, o, x, y):
+        _, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p, o, _ = adamw.apply(p, g, o, ocfg)
+        return p, o
+
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        idx = rng.integers(0, len(X), batch)
+        dparams, ostate = train_step(dparams, ostate,
+                                     jnp.asarray(X[idx]), jnp.asarray(Y[idx]))
+    return dparams

@@ -39,7 +39,8 @@ engine their inspect callback and their job thunks and let it decide.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, List, Optional
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core.breakpoints import GlobalCountBreakpoint, LocalBreakpoint
 from repro.core.controller import Controller
@@ -60,13 +61,20 @@ class Engine:
         self.costs = CostBook()
         self.local_bps: List[Any] = []
         self.global_bps: List[Any] = []
-        self.decisions: List[Dict[str, Any]] = []
+        # decision telemetry ring buffer: every choose_* call appends
+        # (decision kind, chosen arm, per-arm scores, and the CostBook
+        # inputs the scores were computed from).  Bounded so a long-running
+        # engine cannot grow without bound; surfaced through inspect() and
+        # ServeEngine._inspect()["decisions"] — the explainability seed of
+        # ROADMAP item 5.
+        self.decisions: Deque[Dict[str, Any]] = deque(maxlen=512)
         self.jobs_run: Dict[str, int] = {}
         self.max_prefill_defer = max_prefill_defer
         self._prefill_defer = 0
         self._dispatch_rounds: Dict[int, int] = {}
         self._serve_rounds: Dict[int, int] = {}
         self._seed_rounds: Dict[int, int] = {}
+        self._compact_rounds: Dict[int, int] = {}
         self._cm = CostModel(parallelism=1.0)
 
     # ---------------------------------------------------------- control plane
@@ -116,25 +124,26 @@ class Engine:
         if job.tokens:
             self.costs.observe(job.kind + "_per_tok", seconds / job.tokens)
 
-    def observe_accept(self, pool_id: int, frac: float) -> None:
+    def observe_accept(self, pool_id: int, frac: float,
+                       arm: str = "ngram") -> None:
         """Feed one speculative tick's acceptance fraction (committed drafts
-        / proposed drafts) into the pool's acceptance-rate EMA.  Unlike job
-        runtimes there is no compile-warm-up to skip — the first tick's
-        acceptance is as real as the hundredth's — so this writes straight
-        to the CostBook."""
-        self.costs.observe_rate(J.accept_kind(pool_id), frac)
+        / proposed drafts) into the pool's per-arm acceptance-rate EMA.
+        Unlike job runtimes there is no compile-warm-up to skip — the first
+        tick's acceptance is as real as the hundredth's — so this writes
+        straight to the CostBook."""
+        self.costs.observe_rate(J.accept_kind(pool_id, arm), frac)
 
     def _decide(self, kind: str, choice: str, **detail) -> str:
+        # the deque's maxlen bounds the audit trail; every entry carries the
+        # choice plus whatever scores/inputs the caller passed
         self.decisions.append({"decision": kind, "choice": choice, **detail})
-        if len(self.decisions) > 512:          # bounded audit trail
-            del self.decisions[:256]
         return choice
 
     def inspect(self) -> Dict[str, Any]:
         """Engine-level state for Inspect replies."""
         return {"costs": self.costs.snapshot(),
                 "jobs_run": dict(self.jobs_run),
-                "decisions_tail": self.decisions[-5:],
+                "decisions_tail": list(self.decisions)[-5:],
                 "breakpoints": len(self.local_bps) + len(self.global_bps)}
 
     # ------------------------------------------------------------- decisions
@@ -204,17 +213,19 @@ class Engine:
     def choose_serve_tick(self, decode_slots: int, prefill_slots: int,
                           prefill_tokens: int, decode_chunk: int,
                           prefill_chunk: int, spec_len: int = 0,
-                          pool_id: int = 0) -> str:
+                          pool_id: int = 0,
+                          arms: Tuple[str, ...] = ("ngram",)) -> str:
         """Tick composition: 'decode' (short, decode-state slots only),
         'prefill' (long, every active slot advances a prefill_chunk), or —
-        when the serving engine offers it (``spec_len > 1``) — 'spec', the
-        speculative k-token decode arm.  The decode-vs-prefill choice is
-        min-FRT with an aging bound; the plain-vs-spec split is a separate
-        throughput decision over measured acceptance (``_choose_decode_arm``)
-        taken only once a decode-composition tick has won."""
+        when the serving engine offers it (``spec_len > 1``) — a speculative
+        k-token decode arm ``spec:<proposer>`` from ``arms``.  The
+        decode-vs-prefill choice is min-FRT with an aging bound; the
+        plain-vs-spec-vs-spec split is a separate throughput decision over
+        measured per-arm acceptance (``_choose_decode_arm``) taken only once
+        a decode-composition tick has won."""
         if prefill_slots == 0:
             return self._choose_decode_arm(decode_slots, decode_chunk,
-                                           spec_len, pool_id)
+                                           spec_len, pool_id, arms)
         if decode_slots == 0:
             self._prefill_defer = 0
             return self._decide("serve_tick", "prefill", why="no_decoders")
@@ -236,19 +247,23 @@ class Engine:
             self._prefill_defer += 1
             self._decide("serve_tick", "decode",
                          frt={"decode": frt_d, "prefill": frt_p},
+                         inputs={"t_tok": t_tok},
                          defer=self._prefill_defer)
             return self._choose_decode_arm(decode_slots, decode_chunk,
-                                           spec_len, pool_id)
+                                           spec_len, pool_id, arms)
         self._prefill_defer = 0
         return self._decide("serve_tick", "prefill",
-                            frt={"decode": frt_d, "prefill": frt_p})
+                            frt={"decode": frt_d, "prefill": frt_p},
+                            inputs={"t_tok": t_tok})
 
     def _pool_t_tok(self, pool_id: int) -> float:
         """Per-token tick cost for one pool: the pool's own measured EMAs
         first (``jobs.pool_kind`` — the weighted-FRT parallelism term), the
         fleet-wide EMAs as bootstrap for a pool that has not ticked yet,
         then the static prior."""
-        tick_kinds = ("serve_decode", "serve_spec_decode", "serve_prefill")
+        tick_kinds = ("serve_decode", "serve_spec_decode:ngram",
+                      "serve_spec_decode:draft", "serve_spec_decode",
+                      "serve_prefill")
         chain = [J.pool_kind(k, pool_id) + "_per_tok" for k in tick_kinds]
         chain += [k + "_per_tok" for k in tick_kinds]
         return self.costs.estimate_first(chain, 1e-3)
@@ -294,7 +309,8 @@ class Engine:
                      scores=pool_scores, aged=bool(aged))
         if best.mode == "decode" and best.spec_len > 1:
             return best.pool_id, self._choose_decode_arm(
-                best.n_dec, best.chunk, best.spec_len, best.pool_id)
+                best.n_dec, best.chunk, best.spec_len, best.pool_id,
+                best.arms or ("ngram",))
         return best.pool_id, best.mode
 
     def choose_prefix_admission(self, cached_tokens: int,
@@ -340,49 +356,97 @@ class Engine:
                             scores=scores)
 
     def _choose_decode_arm(self, decode_slots: int, decode_chunk: int,
-                           spec_len: int, pool_id: int) -> str:
-        """Plain vs speculative decode tick, per slot pool.
+                           spec_len: int, pool_id: int,
+                           arms: Tuple[str, ...] = ("ngram",)) -> str:
+        """The decode arm family, per slot pool: plain multi-token decode vs
+        one speculative arm per offered proposer (``spec:ngram``,
+        ``spec:draft``, ...).
 
-        Both arms are scored as ``jobs.serve_decode_workflow`` region
-        workflows under ``completion_time``, normalized by the tokens a tick
+        Every arm is scored as a ``jobs.serve_decode_workflow`` region
+        workflow under ``completion_time``, normalized by the tokens a tick
         is *expected to commit*: ``decode_chunk`` for the plain arm (every
-        scan step commits a token), ``1 + a·(spec_len-1)`` for the
-        speculative arm, with ``a`` the pool's measured acceptance-rate EMA
-        — low acceptance prices the wasted verify steps in and flips the
-        choice back to plain even when the verify step itself is cheaper.
-        Bootstrap explores the speculative arm first (it is the only way
-        acceptance gets measured); the losing arm is re-explored every 16th
-        round like ``choose_dispatch_impl`` so a stale acceptance or
-        runtime EMA cannot wedge the choice — workloads drift between
-        repetitive and incompressible text."""
-        if spec_len <= 1:
+        scan step commits a token), ``1 + a·(spec_len-1)`` for a speculative
+        arm, with ``a`` that arm's measured per-pool acceptance-rate EMA
+        (``jobs.accept_kind(pool_id, arm)``) and its verify-tick cost that
+        arm's own runtime EMA (``jobs.spec_kind(arm)``) — the draft arm pays
+        the draft model's propose scan inside the dispatch, so its per-step
+        cost is measured higher and only its higher acceptance can win the
+        score back.  Each speculative arm is bootstrap-explored until both
+        its EMAs exist (acceptance can only be measured by running the arm);
+        afterwards the losing arms rotate through a re-explore slot every
+        16th round so a stale acceptance or runtime EMA cannot wedge the
+        choice — workloads drift between repetitive and incompressible
+        text, and a draft republish changes acceptance mid-stream."""
+        if spec_len <= 1 or not arms:
             return "decode"
-        a = self.costs.estimate(J.accept_kind(pool_id))
-        t_s = self.costs.estimate("serve_spec_decode_per_tok")
-        if a is None or t_s is None:
-            return self._decide("serve_decode_arm", "spec", why="bootstrap",
-                                pool=pool_id)
+        per: Dict[str, tuple] = {}
+        for arm in arms:
+            a = self.costs.estimate(J.accept_kind(pool_id, arm))
+            t_s = self.costs.estimate(J.spec_kind(arm) + "_per_tok")
+            if a is None or t_s is None:
+                return self._decide("serve_decode_arm", f"spec:{arm}",
+                                    why="bootstrap", pool=pool_id)
+            per[arm] = (a, t_s)
         t_p = self.costs.estimate("serve_decode_per_tok")
         if t_p is None:
             return self._decide("serve_decode_arm", "decode", why="explore",
                                 pool=pool_id)
-        scores = {}
-        for arm, wf, committed in (
-                ("decode",
-                 J.serve_decode_workflow("plain", decode_slots, decode_chunk,
-                                         t_p),
-                 float(decode_chunk)),
-                ("spec",
-                 J.serve_decode_workflow("spec", decode_slots, spec_len,
-                                         t_s, accept=a),
-                 1.0 + a * (spec_len - 1))):
-            scores[arm] = completion_time(wf, self._cm) / max(committed,
-                                                              1e-9)
+        inputs: Dict[str, float] = {"t_plain": t_p}
+        scores = {"decode": completion_time(
+            J.serve_decode_workflow("plain", decode_slots, decode_chunk,
+                                    t_p), self._cm) / max(decode_chunk, 1)}
+        for arm, (a, t_s) in per.items():
+            wf = J.serve_decode_workflow("spec", decode_slots, spec_len,
+                                         t_s, accept=a)
+            scores[f"spec:{arm}"] = completion_time(wf, self._cm) / max(
+                1.0 + a * (spec_len - 1), 1e-9)
+            inputs[f"accept:{arm}"] = a
+            inputs[f"t_spec:{arm}"] = t_s
         best = min(scores, key=scores.get)
         self._serve_rounds[pool_id] = self._serve_rounds.get(pool_id, 0) + 1
-        if self._serve_rounds[pool_id] % 16 == 0:
-            loser = "spec" if best == "decode" else "decode"
+        r = self._serve_rounds[pool_id]
+        if r % 16 == 0:
+            # rotate through the losers so every arm's EMAs stay fresh even
+            # with 3+ arms in the family
+            losers = sorted(k for k in scores if k != best)
+            loser = losers[(r // 16 - 1) % len(losers)]
             return self._decide("serve_decode_arm", loser, why="re-explore",
-                                pool=pool_id, accept=a, scores=scores)
+                                pool=pool_id, scores=scores, inputs=inputs)
         return self._decide("serve_decode_arm", best, pool=pool_id,
-                            accept=a, scores=scores)
+                            scores=scores, inputs=inputs)
+
+    def choose_compact(self, pool_id: int) -> bool:
+        """Compact vs full batch layout for an eligible decode tick (at
+        least half the pool sitting out), per slot pool — the promotion of
+        the old default-off ``compact_decode`` flag to a measured CostBook
+        arm.
+
+        Both layouts advance the same participants by the same chunk, so
+        the cheaper *measured per-token tick time* (``jobs.layout_kind``,
+        recorded only on eligible ticks so both EMAs cover the same
+        occupancy regime) wins directly — no workflow shape differs between
+        them.  Bootstrap explores compact first (the gather/scatter cost
+        can only be measured by running it), then full, and the losing
+        layout is re-explored every 16th eligible tick so a drifting
+        machine or pool shape cannot wedge the choice.  The config override
+        (``ServeEngine(compact_decode=True/False)``) bypasses this decision
+        entirely."""
+        t_c = self.costs.estimate(J.layout_kind(True, pool_id) + "_per_tok")
+        if t_c is None:
+            return self._decide("serve_compact", "compact", why="bootstrap",
+                                pool=pool_id) == "compact"
+        t_f = self.costs.estimate(J.layout_kind(False, pool_id) + "_per_tok")
+        if t_f is None:
+            return self._decide("serve_compact", "full", why="explore",
+                                pool=pool_id) == "compact"
+        scores = {"compact": t_c, "full": t_f}
+        best = min(scores, key=scores.get)
+        self._compact_rounds[pool_id] = \
+            self._compact_rounds.get(pool_id, 0) + 1
+        if self._compact_rounds[pool_id] % 16 == 0:
+            loser = "full" if best == "compact" else "compact"
+            return self._decide("serve_compact", loser, why="re-explore",
+                                pool=pool_id, scores=scores,
+                                inputs=scores) == "compact"
+        return self._decide("serve_compact", best, pool=pool_id,
+                            scores=scores, inputs=scores) == "compact"

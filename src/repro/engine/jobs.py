@@ -199,14 +199,37 @@ class TickCandidate:
     aged: bool = False         # a participant hit its class aging bound
     overdue: int = 0           # ticks past the tightest violated bound
     spec_len: int = 0          # >1: the speculative arm is offered
+    arms: tuple = ()           # proposer arms offered ("ngram", "draft", ...)
 
 
-def accept_kind(pool_id: int) -> str:
+def accept_kind(pool_id: int, arm: str = "ngram") -> str:
     """CostBook key for a slot pool's speculative-decode acceptance-rate
-    EMA.  Keyed per pool: pools serve different traffic (one engine may own
-    several), and acceptance is a property of the *workload* flowing through
-    a pool, not of the machine."""
-    return f"serve_accept:p{pool_id}"
+    EMA, per proposer arm.  Keyed per pool because pools serve different
+    traffic (acceptance is a property of the *workload* flowing through a
+    pool, not of the machine) and per arm because proposers fail
+    differently — the n-gram table collapses on non-repetitive text where
+    a distilled draft model keeps agreeing."""
+    return f"serve_accept:{arm}:p{pool_id}"
+
+
+def spec_kind(arm: str) -> str:
+    """CostBook key for the speculative tick run with one proposer arm.
+    Per-arm runtimes differ structurally — the draft arm pays the draft
+    model's propose scan and per-step cache threading inside the same
+    dispatch — so each arm carries its own EMA; the unsuffixed
+    ``serve_spec_decode`` aggregate is still recorded as the bootstrap
+    fallback for tick-composition pricing."""
+    return f"serve_spec_decode:{arm}"
+
+
+def layout_kind(compact: bool, pool_id: int) -> str:
+    """CostBook key for a decode tick's batch layout on one pool: compact
+    (participants gathered into a power-of-two batch before the vmap) vs
+    full (all slots run, sat-out lanes burn FLOPs).  Recorded only on ticks
+    where compaction was *eligible* (>= half the pool sitting out), so the
+    two EMAs compare the same occupancy regime and
+    ``Engine.choose_compact`` can flip the layout from measurement."""
+    return f"serve_tick_{'compact' if compact else 'full'}:p{pool_id}"
 
 
 def serve_decode_workflow(arm: str, decode_slots: int, chunk: int,
@@ -217,10 +240,14 @@ def serve_decode_workflow(arm: str, decode_slots: int, chunk: int,
     therefore committing) one token per slot — its selectivity is ``chunk``,
     so the sink's cardinality is exactly the committed-token count.
 
-    ``spec``: the draft op reads the in-pool n-gram table (no model work —
-    its cost rides inside the verify dispatch), the verify op pays the full
-    ``chunk`` scan steps (selectivity ``chunk``: every verified position is
-    a candidate token), and the commit op keeps only the accepted prefix:
+    ``spec``: one workflow shape for the whole proposer family — the draft
+    op produces the chain (n-gram table lookup or draft-model decode; either
+    way its cost rides inside the measured verify dispatch, which is why the
+    engine prices each arm with its own ``spec_kind(arm)`` runtime EMA and
+    ``accept_kind(pool_id, arm)`` acceptance EMA), the verify op pays the
+    full ``chunk`` scan steps (selectivity ``chunk``: every verified
+    position is a candidate token), and the commit op keeps only the
+    accepted prefix:
     its *selectivity* is ``(1 + accept·(chunk-1)) / chunk``, so the sink's
     cardinality is the expected committed-token count.  Region time is paid
     on the verify op regardless of acceptance — exactly the speculative
@@ -236,7 +263,7 @@ def serve_decode_workflow(arm: str, decode_slots: int, chunk: int,
         wf.add_edge("requests", "decode")
         wf.add_edge("decode", "stream_out")
         return wf
-    assert arm == "spec", arm
+    assert arm.startswith("spec"), arm
     committed = 1.0 + accept * max(chunk - 1, 0)
     wf.add_op(Op("draft", "ml", cost_per_tuple=0.0))
     wf.add_op(Op("verify", "ml", cost_per_tuple=t_token * chunk,
@@ -315,6 +342,11 @@ COST_DEFAULTS: Dict[str, float] = {
     "train_step_granulated": 0.10,
     "serve_decode": 0.01,
     "serve_spec_decode": 0.01,
+    # per-proposer-arm verify-tick priors: the draft arm carries the draft
+    # model's propose/threading cost, so its prior sits slightly above the
+    # table-lookup arm's
+    "serve_spec_decode:ngram": 0.01,
+    "serve_spec_decode:draft": 0.012,
     "serve_prefill": 0.05,
     # one batched cache-row copy (prefix-cache seeding); cheaper than a
     # prefill chunk by construction — the bootstrap must favor exploring

@@ -22,22 +22,38 @@ prefill) is a Maestro min-FRT choice over the two candidate region
 workflows (``jobs.serve_tick_workflow``): short decode ticks preempt long
 prefills until the aging bound forces prefill progress.
 
-**Speculative in-tick decoding** (``spec_decode=True``): a per-slot n-gram
-suffix-hash table — int32 arrays living in the donated slot pool, updated
-in-jit from every token the slot streams (prompt and generated alike), so
-proposing costs no host round-trip — drafts up to ``cfg.serve.spec_len``
-tokens per decode tick.  The target model verifies the whole draft chain in
-the same chunk-scan dispatch: a carried ``valid`` mask commits the longest
-accepted prefix and masks every state update (caches, pos, table) past the
-first mismatch, which keeps *all* cache families correct (recurrent and
-conv state cannot be position-rewound the way KV rows can) and makes greedy
-outputs bit-identical to plain decode by construction — an accepted draft
-IS the token greedy decode would have fed.  Whether a decode tick runs the
-speculative or the plain arm is an engine decision from measured
-acceptance-rate and runtime EMAs (``Engine.choose_serve_tick``); the
-speculative arm is host-gated to all-greedy participants because verifying
-sampled (temperature > 0) continuations greedily would change their
-distribution.
+**Speculative in-tick decoding** (``spec_decode=True``): a *proposer*
+(:class:`Proposer`) drafts up to ``cfg.serve.spec_len`` tokens per decode
+tick; the target model verifies the whole draft chain in the same
+chunk-scan dispatch: a carried ``valid`` mask commits the longest accepted
+prefix and masks every non-positional state update (recurrent caches, pos,
+table) past the first mismatch, which keeps *all* cache families correct
+(recurrent and conv state cannot be position-rewound the way KV rows can)
+and makes greedy outputs bit-identical to plain decode by construction — an
+accepted draft IS the token greedy decode would have fed.  Two proposers
+share that contract:
+
+* ``ngram`` — a per-slot n-gram suffix-hash table, int32 arrays living in
+  the donated slot pool and updated in-jit from every token the slot
+  streams (prompt and generated alike), so proposing costs no host
+  round-trip.  Strong on repetitive streams, collapses on random text.
+* ``draft`` — a second, much smaller parameter set (``engine.draft``:
+  either a truncated-layer *self*-draft sliced from the serve model, or an
+  independently-specified/distilled small config) that greedily decodes
+  ``spec_len - 1`` steps ahead inside the same dispatch.  Its per-slot
+  cache rows live in the donated pool (``pool["draft"]``) — reset-masked on
+  join, snapshotted/seeded by the prefix cache with the rest of the row —
+  and are advanced by every committed token on *every* arm (prefill, plain
+  decode, and verify alike), so the draft state is always exactly the
+  committed stream.  The propose scan runs on throwaway copies; a wrong,
+  stale, or hot-swapped draft (``update(draft_params=...)``) can only
+  lower acceptance, never change outputs.
+
+Which arm a decode tick runs — plain, ``spec:ngram``, or ``spec:draft`` —
+is an engine decision from measured per-arm acceptance-rate and runtime
+EMAs (``Engine._choose_decode_arm``); speculative arms are host-gated to
+all-greedy participants because verifying sampled (temperature > 0)
+continuations greedily would change their distribution.
 
 **Multi-pool, priority-aware serving**: a ServeEngine owns ``pools`` slot
 pools (each a :class:`SlotPool` with its own donated cache pool; the tick
@@ -112,7 +128,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.breakpoints import GlobalCountBreakpoint, LocalBreakpoint
 from repro.engine.engine import Engine
-from repro.engine.jobs import Job, TickCandidate, pool_kind
+from repro.engine.jobs import (Job, TickCandidate, layout_kind, pool_kind,
+                               spec_kind)
 from repro.engine.prefix_cache import PrefixAnalyzer, PrefixCache
 from repro.models import lm
 
@@ -140,8 +157,91 @@ _NG_MULTS = (0x9E3779B1, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F)
 _POSITIONAL_CACHE_TYPES = ("attn", "local", "moe", "shared_attn", "dec")
 
 
+class Proposer:
+    """One speculative-proposer arm: the source of the draft chain the
+    target verifies.
+
+    The contract every implementation shares (and the differential harness
+    enforces): ``build(cfg, draft_cfg, ng_hash, push)`` returns a traced
+    ``propose(dparams, draft_caches, ng, ctx, pos, toks) -> [L] tokens``
+    whose output chain starts with ``toks[0]`` (the pending committed
+    token) followed by ``L-1`` proposals, and which mutates **no persistent
+    state** — any state the proposal consumes is carried through the scan
+    as throwaway copies.  The verify scan then re-feeds every token through
+    the persistent per-slot state under the valid-mask/freeze discipline,
+    so a proposer can only affect *acceptance*: correctness is the target
+    model's argmax, whatever was proposed."""
+
+    name: str = ""
+
+    @staticmethod
+    def build(cfg, draft_cfg, ng_hash, push):
+        raise NotImplementedError
+
+
+class NgramProposer(Proposer):
+    """Successor lookups from the slot's in-pool n-gram suffix table."""
+
+    name = "ngram"
+
+    @staticmethod
+    def build(cfg, draft_cfg, ng_hash, push):
+        def propose(dparams, draft, ng, ctx, pos, toks):
+            L = toks.shape[0]
+
+            def step(carry, _):
+                win, tok = carry
+                win = push(win, tok)
+                nxt = ng[ng_hash(win)]
+                return (win, nxt), nxt
+
+            _, drafts = jax.lax.scan(step, (ctx, toks[0]), None,
+                                     length=L - 1)
+            return jnp.concatenate([toks[:1], drafts])
+
+        return propose
+
+
+class DraftProposer(Proposer):
+    """Greedy decode of the small draft model, ``L-1`` steps ahead of the
+    committed stream.  The scan starts from the slot's persistent draft
+    cache row and position but carries *copies* — the overshoot state a
+    partially-rejected chain would leave behind is simply dropped, and the
+    verify scan advances the persistent draft row by exactly the committed
+    tokens instead."""
+
+    name = "draft"
+
+    @staticmethod
+    def build(cfg, draft_cfg, ng_hash, push):
+        assert draft_cfg is not None, \
+            "the draft proposer needs draft_cfg/draft_params"
+
+        def propose(dparams, draft, ng, ctx, pos, toks):
+            L = toks.shape[0]
+
+            def step(carry, _):
+                caches, p, tok = carry
+                logits, new = lm.decode_step(
+                    dparams, {"caches": caches, "pos": p}, tok[None, None],
+                    draft_cfg)
+                nxt = jnp.argmax(logits[0], -1).astype(jnp.int32)
+                return (new["caches"], new["pos"], nxt), nxt
+
+            _, drafts = jax.lax.scan(step, (draft, pos, toks[0]), None,
+                                     length=L - 1)
+            return jnp.concatenate([toks[:1], drafts])
+
+        return propose
+
+
+PROPOSERS = {p.name: p for p in (NgramProposer, DraftProposer)}
+
+
 @functools.lru_cache(maxsize=None)
-def build_slot_tick(cfg: ArchConfig, spec_len: int = 0):
+def build_slot_tick(cfg: ArchConfig, spec_len: int = 0,
+                    draft_cfg: Optional[ArchConfig] = None,
+                    proposer: str = "ngram"):
     """Jitted tick: vmap of a per-slot chunk scan over ``lm.decode_step``.
 
     Per slot: a pool row (cache leaves ``[n, 1, S, ...]`` plus the n-gram
@@ -159,16 +259,29 @@ def build_slot_tick(cfg: ArchConfig, spec_len: int = 0):
     ran last (collisions only cost acceptance, never correctness).
 
     ``spec_len > 0`` builds the speculative variant (decode-only, all-greedy
-    participants): the suffix table proposes a ``spec_len``-token draft
-    chain ahead of the scan; the scan verifies it with a carried ``valid``
-    mask that freezes caches/pos/table past the first mismatch, and
-    ``n_valid`` reports the committed prefix (the accepted drafts plus the
-    model's own correction token).  No sampling and no PRNG-key advance
-    happen on this path — the keys pass through untouched.
+    participants): the named ``proposer`` (:data:`PROPOSERS`) produces a
+    ``spec_len``-token draft chain ahead of the scan; the scan verifies it
+    with a carried ``valid`` mask that freezes non-positional caches, pos
+    and table past the first mismatch, and ``n_valid`` reports the
+    committed prefix (the accepted drafts plus the model's own correction
+    token).  No sampling and no PRNG-key advance happen on this path — the
+    keys pass through untouched.
 
-    Memoized per (cfg, spec_len): every ServeEngine over the same config
-    shares one jit, so compiled tick specializations are reused across
-    engine instances (the differential test harness builds hundreds).
+    ``draft_cfg`` (not None) threads a draft-model parameter set through
+    the tick as a second, non-donated argument: the signature grows to
+    ``(params, dparams, pool, ...)`` and the pool carries per-slot draft
+    cache rows under ``pool["draft"]`` which EVERY arm advances by each
+    token it feeds the target (prefill chunks, plain decode, and the
+    verify scan alike — under the same valid-mask/frozen-pos discipline),
+    so whichever arm ran last, the draft state equals the committed stream.
+    The draft shares the slot's position (it consumes exactly the target's
+    tokens), and its rejected speculative writes die the same way the
+    target's do: the frozen pos makes them land on one dead row.
+
+    Memoized per (cfg, spec_len, draft_cfg, proposer): every ServeEngine
+    over the same config shares one jit, so compiled tick specializations
+    are reused across engine instances (the differential test harness
+    builds hundreds).
     """
     table = cfg.serve.spec_table
     n_ctx = cfg.serve.spec_ctx
@@ -186,36 +299,55 @@ def build_slot_tick(cfg: ArchConfig, spec_len: int = 0):
             return tok[None]
         return jnp.concatenate([ctx[1:], tok[None]])
 
-    def one_slot(params, pool, pos, toks, n_given, active, reset, key,
-                 temp):
+    def feed_draft(dparams, draft, pos, tok, valid=None):
+        """Advance the persistent per-slot draft row by one fed token at the
+        shared (possibly frozen) ``pos``.  ``valid`` (verify scan only)
+        applies the same positional/recurrent masking split the target's
+        caches get: positional draft writes under a frozen pos land on one
+        dead row the next accepted token overwrites, recurrent draft leaves
+        must be frozen explicitly."""
+        _, new = lm.decode_step(
+            dparams, {"caches": draft, "pos": pos}, tok[None, None],
+            draft_cfg)
+        if valid is None:
+            return new["caches"]
+        return {
+            t: (new["caches"][t] if t in _POSITIONAL_CACHE_TYPES
+                else jax.tree.map(lambda o, n: jnp.where(valid, n, o),
+                                  draft[t], new["caches"][t]))
+            for t in draft}
+
+    propose = PROPOSERS[proposer].build(cfg, draft_cfg, ng_hash, push) \
+        if spec_len else None
+
+    def one_slot(params, dparams, pool, pos, toks, n_given, active, reset,
+                 key, temp):
         caches, ng, ctx = pool["caches"], pool["ng"], pool["ctx"]
         # a freshly joined slot starts from a zeroed cache row, an empty
-        # suffix table and pos 0 — folded into the tick so the join costs
-        # no eager scatter dispatches
+        # suffix table, zeroed draft state and pos 0 — folded into the tick
+        # so the join costs no eager scatter dispatches
         caches = jax.tree.map(
             lambda c: jnp.where(reset, jnp.zeros_like(c), c), caches)
         ng = jnp.where(reset, 0, ng)
         ctx = jnp.where(reset, 0, ctx)
         pos = jnp.where(reset, 0, pos)
+        draft0 = None
+        if draft_cfg is not None:
+            draft0 = jax.tree.map(
+                lambda c: jnp.where(reset, jnp.zeros_like(c), c),
+                pool["draft"])
         L = toks.shape[0]
 
         if spec_len:
-            # draft chain: successor lookups from the suffix table, seeded
-            # by the pending token toks[0]; lookup key = the n_ctx-token
-            # window ending at the predecessor
-            def propose(carry, _):
-                win, tok = carry
-                win = push(win, tok)
-                nxt = ng[ng_hash(win)]
-                return (win, nxt), nxt
-
+            # draft chain from the proposer arm this tick compiled for; the
+            # propose scan carries throwaway state copies (rolling-window
+            # draft caches wrap, so kept overshoot writes could alias valid
+            # history — see DraftProposer)
             if L > 1:
-                _, drafts = jax.lax.scan(propose, (ctx, toks[0]), None,
-                                         length=L - 1)
-                toks = jnp.concatenate([toks[:1], drafts])
+                toks = propose(dparams, draft0, ng, ctx, pos, toks)
 
             def body(carry, j):
-                caches, pos, ng, win, valid = carry
+                caches, draft, pos, ng, win, valid = carry
                 tok = toks[j]
                 # learn the stream (valid steps only: rejected drafts are
                 # not real stream tokens and would poison the table)
@@ -237,48 +369,73 @@ def build_slot_tick(cfg: ArchConfig, spec_len: int = 0):
                             lambda o, n: jnp.where(valid, n, o),
                             caches[t], new["caches"][t]))
                     for t in caches}
+                if draft_cfg is not None:
+                    # the persistent draft row consumes the same committed
+                    # tokens the target does, under the same freeze
+                    draft = feed_draft(dparams, draft, pos, tok, valid)
                 pos = jnp.where(valid, new["pos"], pos)
                 nxt_ok = jnp.where(j + 1 < L,
                                    toks[jnp.minimum(j + 1, L - 1)] == nxt,
                                    False)
-                return (caches, pos, ng, win, valid & nxt_ok), (nxt, valid)
+                return (caches, draft, pos, ng, win, valid & nxt_ok), \
+                    (nxt, valid)
 
-            (c2, p2, ng2, ctx2, _), (emitted, valids) = jax.lax.scan(
-                body, (caches, pos, ng, ctx, jnp.bool_(True)),
+            (c2, d2, p2, ng2, ctx2, _), (emitted, valids) = jax.lax.scan(
+                body, (caches, draft0, pos, ng, ctx, jnp.bool_(True)),
                 jnp.arange(L))
             pool_f = {"caches": jax.tree.map(
                 lambda o, n: jnp.where(active, n, o), caches, c2),
                 "ng": jnp.where(active, ng2, ng),
                 "ctx": jnp.where(active, ctx2, ctx)}
+            if draft_cfg is not None:
+                pool_f["draft"] = jax.tree.map(
+                    lambda o, n: jnp.where(active, n, o), draft0, d2)
             n_valid = jnp.where(active, valids.sum(dtype=jnp.int32), 0)
             return (pool_f, jnp.where(active, p2, pos), key, emitted,
                     n_valid)
 
         def body(carry, j):
-            caches, pos, prev, key, ng, win = carry
+            caches, draft, pos, prev, key, ng, win = carry
             tok = jnp.where(j < n_given, toks[j], prev)
             hidx = ng_hash(win)
             ng = ng.at[hidx].set(tok)
             win = push(win, tok)
             logits, new = lm.decode_step(
                 params, {"caches": caches, "pos": pos}, tok[None, None], cfg)
+            if draft_cfg is not None:
+                # the draft shadows every arm (prefill chunks and plain
+                # decode too), so its state always equals the committed
+                # stream whichever arm the engine picks next tick
+                draft = feed_draft(dparams, draft, pos, tok)
             key, sub = jax.random.split(key)
             nxt = sample_traced(logits[0], sub, temp)
-            return (new["caches"], new["pos"], nxt, key, ng, win), nxt
+            return (new["caches"], draft, new["pos"], nxt, key, ng, win), nxt
 
-        (c2, p2, _, k2, ng2, ctx2), emitted = jax.lax.scan(
-            body, (caches, pos, toks[0], key, ng, ctx), jnp.arange(L))
+        (c2, d2, p2, _, k2, ng2, ctx2), emitted = jax.lax.scan(
+            body, (caches, draft0, pos, toks[0], key, ng, ctx),
+            jnp.arange(L))
         pool_f = {"caches": jax.tree.map(
             lambda o, n: jnp.where(active, n, o), caches, c2),
             "ng": jnp.where(active, ng2, ng),
             "ctx": jnp.where(active, ctx2, ctx)}
+        if draft_cfg is not None:
+            pool_f["draft"] = jax.tree.map(
+                lambda o, n: jnp.where(active, n, o), draft0, d2)
         return (pool_f, jnp.where(active, p2, pos),
                 jnp.where(active, k2, key), emitted,
                 jnp.where(active, jnp.int32(L), 0))
 
-    return jax.jit(jax.vmap(one_slot,
-                            in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0)),
-                   donate_argnums=(1,))
+    vm = jax.vmap(one_slot, in_axes=(None, None, 0, 0, 0, 0, 0, 0, 0, 0))
+    if draft_cfg is None:
+        # draft-free ticks keep the historical 9-arg signature (dparams is
+        # an empty pytree folded out of the jit)
+        def tick(params, pool, pos, toks, n_given, active, reset, key,
+                 temp):
+            return vm(params, None, pool, pos, toks, n_given, active,
+                      reset, key, temp)
+
+        return jax.jit(tick, donate_argnums=(1,))
+    return jax.jit(vm, donate_argnums=(2,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -345,14 +502,16 @@ class SlotPool:
 
     Every pool owns its cache rows, per-slot n-gram tables, positions, PRNG
     keys and reset mask; the compiled tick functions are NOT per-pool —
-    ``build_slot_tick`` memoizes per (cfg, spec_len), so pools of equal slot
-    count share one jit.  ``pool_id`` is the engine-visible identity: tick
-    jobs are recorded under ``jobs.pool_kind(kind, pool_id)`` (the
-    per-pool cost EMAs the weighted-FRT arbitration scores) and acceptance
-    under ``jobs.accept_kind(pool_id)``."""
+    ``build_slot_tick`` memoizes per (cfg, spec_len, draft_cfg, proposer),
+    so pools of equal slot count share one jit.  ``pool_id`` is the
+    engine-visible identity: tick jobs are recorded under
+    ``jobs.pool_kind(kind, pool_id)`` (the per-pool cost EMAs the
+    weighted-FRT arbitration scores) and acceptance under
+    ``jobs.accept_kind(pool_id, arm)``."""
 
     def __init__(self, cfg: ArchConfig, pool_id: int, slots: int,
-                 max_len: int, base_key):
+                 max_len: int, base_key,
+                 draft_cfg: Optional[ArchConfig] = None):
         self.pool_id = pool_id
         self.slots = slots
         one = lm.init_cache(cfg, 1, max_len)
@@ -365,6 +524,14 @@ class SlotPool:
             "ng": jnp.zeros((slots, cfg.serve.spec_table), jnp.int32),
             "ctx": jnp.zeros((slots, cfg.serve.spec_ctx), jnp.int32),
         }
+        if draft_cfg is not None:
+            # per-slot draft-model cache rows: same donated pool, so they
+            # are reset-masked on join, snapshotted and seeded by the prefix
+            # cache, and advanced in-jit with everything else
+            done = lm.init_cache(draft_cfg, 1, max_len)
+            self.pool["draft"] = jax.tree.map(
+                lambda x: jnp.zeros((slots,) + x.shape, x.dtype),
+                done["caches"])
         self.pos = jnp.zeros((slots,), jnp.int32)
         self.pos_host = np.zeros((slots,), np.int64)   # device-sync-free view
         self.reset = np.zeros((slots,), bool)          # zero these rows in-jit
@@ -379,11 +546,14 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, max_len: int = 128,
                  slots: int = 4, prefill_chunk: int = 16,
                  decode_chunk: int = 4, engine: Optional[Engine] = None,
-                 seed: int = 0, compact_decode: bool = False,
+                 seed: int = 0, compact_decode: Optional[bool] = None,
                  spec_decode: bool = False, pool_id: int = 0,
                  pools: int = 1,
                  class_pools: Optional[Dict[str, tuple]] = None,
-                 prefix_cache: bool = False, params_version: int = 0):
+                 prefix_cache: bool = False, params_version: int = 0,
+                 draft: Optional[str] = None,
+                 draft_cfg: Optional[ArchConfig] = None,
+                 draft_params=None):
         self.cfg = cfg
         self.params = params
         self.engine = engine or Engine()
@@ -396,20 +566,46 @@ class ServeEngine:
         # rule), gather the participants into a compact batch before the
         # tick vmap so sat-out lanes stop burning decode FLOPs.  Costs one
         # gather + scatter-back of the participating cache rows per tick,
-        # so it is gated on the pool being at least half idle.
+        # so it is gated on the pool being at least half idle — and within
+        # that gate, layout is a MEASURED CostBook arm: compact_decode=None
+        # (the default) lets ``Engine.choose_compact`` flip per tick from
+        # per-pool compact-vs-full per-token EMAs; True/False pins it.
         self.compact_decode = compact_decode
         self.compact_ticks = 0
         # speculative in-tick decoding (see module docstring): offers the
-        # engine a third tick arm — n-gram draft + chunk-scan verify — whose
-        # use is decided per tick from measured acceptance/runtime EMAs.
-        # ``pool_id`` offsets this engine's pool ids (pools get
-        # pool_id..pool_id+pools-1) so acceptance and runtime EMAs stay
-        # namespaced when several ServeEngines share one Engine.
+        # engine extra tick arms — proposer draft + chunk-scan verify —
+        # whose use is decided per tick from measured per-arm
+        # acceptance/runtime EMAs.  ``pool_id`` offsets this engine's pool
+        # ids (pools get pool_id..pool_id+pools-1) so acceptance and
+        # runtime EMAs stay namespaced when several ServeEngines share one
+        # Engine.
         self.spec_decode = spec_decode
         self.pool_id = pool_id
         self.spec_ticks = 0
         self.spec_proposed = 0      # draft tokens offered for verification
         self.spec_accepted = 0      # draft tokens committed
+        # per-arm speculative counters ({"ngram": {...}, "draft": {...}})
+        self.spec_arms: Dict[str, Dict[str, int]] = {}
+        # draft-model proposer: draft="self" slices a truncated self-draft
+        # out of the serve params (cfg.serve.draft_layers blocks + shared
+        # head); an independent/distilled draft arrives as
+        # draft_cfg+draft_params.  Either way the draft is acceptance-only:
+        # it can never change outputs (engine.draft module docstring).
+        from repro.engine.draft import slice_draft_params, truncated_draft_cfg
+        self.draft_cfg: Optional[ArchConfig] = None
+        self.draft_params = None
+        if draft is not None:
+            assert draft == "self", f"unknown draft mode {draft!r}"
+            assert draft_cfg is None and draft_params is None, \
+                "draft='self' derives the draft from the serve params"
+            self.draft_cfg = truncated_draft_cfg(cfg)
+            self.draft_params = slice_draft_params(params, cfg,
+                                                   self.draft_cfg)
+        elif draft_cfg is not None:
+            assert draft_params is not None, \
+                "an independent draft_cfg needs draft_params"
+            self.draft_cfg = draft_cfg
+            self.draft_params = draft_params
         # priority classes: name -> PriorityClass; the first table entry is
         # the default for requests submitted without a priority
         self.classes = {c.name: c for c in cfg.serve.classes}
@@ -433,9 +629,10 @@ class ServeEngine:
             SlotPool(cfg, pool_id + i, slots, max_len,
                      self._base_key if i == 0
                      else jax.random.fold_in(self._base_key,
-                                             0x7F000000 + i))
+                                             0x7F000000 + i),
+                     draft_cfg=self.draft_cfg)
             for i in range(max(int(pools), 1))]
-        self._tick = build_slot_tick(cfg)
+        self._tick = build_slot_tick(cfg, 0, self.draft_cfg)
         self._compiled: set = set()    # (spec, tick_len, rows) already jitted
         # cross-request prefix cache + result cache (module docstring):
         # snapshots committed prompt prefixes at prefill tick boundaries and
@@ -672,7 +869,15 @@ class ServeEngine:
                 "spec": {"enabled": self.spec_decode,
                          "ticks": self.spec_ticks,
                          "proposed": self.spec_proposed,
-                         "accepted": self.spec_accepted},
+                         "accepted": self.spec_accepted,
+                         "draft": None if self.draft_cfg is None
+                         else self.draft_cfg.name,
+                         "arms": {a: dict(c)
+                                  for a, c in self.spec_arms.items()}},
+                # decision telemetry ring buffer: every choose_* call the
+                # engine made, with the per-arm scores and CostBook inputs
+                # it saw — the explainability substrate (ROADMAP item 5)
+                "decisions": list(self.engine.decisions),
                 "prefix_cache": (self.prefix.stats()
                                  if self.prefix is not None
                                  else {"enabled": False}),
@@ -700,6 +905,17 @@ class ServeEngine:
             self.prefill_chunk = int(updates["prefill_chunk"])
         if "spec_decode" in updates:
             self.spec_decode = bool(updates["spec_decode"])
+        if "compact_decode" in updates:
+            v = updates["compact_decode"]
+            self.compact_decode = None if v is None else bool(v)
+        if "draft_params" in updates:
+            # hot draft republish: a draft is acceptance-only state, so the
+            # swap needs no drain, no re-seed and no cache relayout — the
+            # next draft-arm tick simply proposes from the new weights.
+            # Ignored when no draft was configured at construction: hot
+            # ENABLING a draft would need a pool relayout (draft rows).
+            if self.draft_cfg is not None:
+                self.draft_params = updates["draft_params"]
         if "prefix_cache" in updates:
             on = bool(updates["prefix_cache"])
             if on and self.prefix is None:
@@ -762,12 +978,21 @@ class ServeEngine:
         return L
 
     def _pool_spec_ok(self, act: List[Request]) -> bool:
-        """The speculative arm is only offered when every decode participant
-        is greedy: verifying sampled continuations greedily would change
-        their distribution (module docstring)."""
+        """The speculative arms are only offered when every decode
+        participant is greedy: verifying sampled continuations greedily
+        would change their distribution (module docstring)."""
         dec = [r for r in act if not r.prefilling]
         return (self.spec_decode and self.cfg.serve.spec_len > 1
                 and bool(dec) and all(r.temperature <= 0 for r in dec))
+
+    def _pool_spec_arms(self, act: List[Request]) -> tuple:
+        """The proposer arms this pool's decode tick may run, by name.
+        With a draft model loaded the engine arbitrates {plain, spec:ngram,
+        spec:draft}; without, the historical {plain, spec:ngram} pair."""
+        if not self._pool_spec_ok(act):
+            return ()
+        return ("ngram", "draft") if self.draft_cfg is not None \
+            else ("ngram",)
 
     def _candidates(self) -> List[TickCandidate]:
         """One TickCandidate per (pool, composition) with work: the menu
@@ -784,11 +1009,12 @@ class ServeEngine:
             weight = lambda rs: sum(self.classes[r.priority].weight
                                     for r in rs)
             if dec:
+                arms = self._pool_spec_arms(act)
                 cands.append(TickCandidate(
                     sp.pool_id, "decode", n_dec=len(dec), n_pre=len(pre),
                     chunk=self.decode_chunk, weight=weight(dec),
-                    spec_len=self.cfg.serve.spec_len
-                    if self._pool_spec_ok(act) else 0))
+                    spec_len=self.cfg.serve.spec_len if arms else 0,
+                    arms=arms))
             if pre:
                 overdue = max(r.deferred - self.classes[r.priority].max_defer
                               for r in pre)
@@ -840,11 +1066,12 @@ class ServeEngine:
             n_dec = len(act) - n_pre
             pre_toks = sum(len(r.prompt) - r.prompt_off
                            for r in act if r.prefilling)
+            arms = self._pool_spec_arms(act)
             mode = self.engine.choose_serve_tick(
                 n_dec, n_pre, pre_toks, self.decode_chunk,
                 self.prefill_chunk,
-                spec_len=spec_len if self._pool_spec_ok(act) else 0,
-                pool_id=sp.pool_id)
+                spec_len=spec_len if arms else 0,
+                pool_id=sp.pool_id, arms=arms)
         else:
             cands = self._candidates()
             if not cands:
@@ -853,10 +1080,18 @@ class ServeEngine:
             sp = self.pools[gid - self.pool_id]
             act = [r for r in sp.active if r is not None]
         if mode == "spec":
+            # bare-"spec" back-compat (old monkeypatched deciders): map to
+            # the strongest proposer this engine carries
+            mode = "spec:draft" if self.draft_cfg is not None \
+                else "spec:ngram"
+        spec = mode.startswith("spec:")
+        arm = mode.split(":", 1)[1] if spec else ""
+        if spec:
             L = self._tick_len(sp, act, mode, spec_len)
             if L < 2:
-                mode = "decode"      # a 1-token tick has nothing to draft
-        if mode != "spec":
+                mode, spec, arm = "decode", False, ""
+                # a 1-token tick has nothing to draft
+        if not spec:
             chunk = (self.prefill_chunk if mode == "prefill"
                      else self.decode_chunk)
             L = self._tick_len(sp, act, mode, chunk)
@@ -889,8 +1124,13 @@ class ServeEngine:
         # unchanged — and the scatter-back touches only gathered rows, so
         # sat-out slots keep their pending reset flags and cache state.
         part_slots = [r.slot for r in part]
-        compact = (self.compact_decode and mode != "prefill"
-                   and len(part) <= sp.slots // 2)
+        # layout arm: inside the half-idle eligibility gate, compact-vs-full
+        # is either pinned by the config override or chosen per tick by the
+        # engine from measured per-pool layout EMAs (Engine.choose_compact)
+        compact_ok = mode != "prefill" and len(part) <= sp.slots // 2
+        compact = compact_ok and (
+            self.compact_decode if self.compact_decode is not None
+            else self.engine.choose_compact(sp.pool_id))
         if compact:
             nc = 1
             while nc < len(part):
@@ -900,30 +1140,43 @@ class ServeEngine:
         else:
             idx = np.arange(sp.slots, dtype=np.int32)
         rows = len(idx)
-        spec = mode == "spec"
-        cold = (spec, L, rows) not in self._compiled  # fresh specialization:
-        self._compiled.add((spec, L, rows))       # keep compiles out of EMAs
-        kind = {"prefill": "serve_prefill", "decode": "serve_decode",
-                "spec": "serve_spec_decode"}[mode]
-        job = Job(kind, tokens=L * len(part), meta={"cold": cold})
+        ckey = (arm if spec else False, L, rows)  # fresh specialization:
+        cold = ckey not in self._compiled         # keep compiles out of EMAs
+        self._compiled.add(ckey)
+        kind = ("serve_prefill" if mode == "prefill"
+                else spec_kind(arm) if spec else "serve_decode")
+        ntok = L * len(part)
+        job = Job(kind, tokens=ntok, meta={"cold": cold})
         # the same measurement lands under the pool-scoped kind too: the
         # per-pool EMA is the parallelism term of the multi-pool arbitration
-        pjob = Job(pool_kind(kind, sp.pool_id), tokens=L * len(part),
-                   meta={"cold": cold})
-        # build_slot_tick memoizes per (cfg, spec_len), so this lookup is a
-        # cache hit after the first speculative tick
-        fn = build_slot_tick(self.cfg, self.cfg.serve.spec_len) if spec \
-            else self._tick
+        extras = [Job(pool_kind(kind, sp.pool_id), tokens=ntok,
+                      meta={"cold": cold})]
+        if spec:
+            # arm-agnostic aggregate: the bootstrap fallback of the
+            # per-pool t_tok chain (Engine._pool_t_tok)
+            extras.append(Job("serve_spec_decode", tokens=ntok,
+                              meta={"cold": cold}))
+        if compact_ok:
+            # layout EMAs only accumulate on layout-ELIGIBLE ticks, so the
+            # compact-vs-full comparison is apples-to-apples (same
+            # occupancy regime, not compact-halfidle vs full-busy)
+            extras.append(Job(layout_kind(compact, sp.pool_id),
+                              tokens=ntok, meta={"cold": cold}))
+        # build_slot_tick memoizes per (cfg, spec_len, draft_cfg, proposer),
+        # so this lookup is a cache hit after the first tick of each arm
+        fn = build_slot_tick(self.cfg, self.cfg.serve.spec_len,
+                             self.draft_cfg, arm) if spec else self._tick
+        dargs = (self.draft_params,) if self.draft_cfg is not None else ()
         if compact:
             jidx = jnp.asarray(idx)
             pool_c = jax.tree.map(lambda c: c[jidx], sp.pool)
             pool_n, pos_n, keys_n, emitted, nvalid = self.engine.run_job(
                 job, lambda: jax.block_until_ready(fn(
-                    self.params, pool_c, sp.pos[jidx],
+                    self.params, *dargs, pool_c, sp.pos[jidx],
                     jnp.asarray(toks[idx]), jnp.asarray(n_given[idx]),
                     jnp.asarray(active[idx]), jnp.asarray(sp.reset[idx]),
                     sp.keys[jidx], jnp.asarray(temps[idx]))),
-                extra=(pjob,))
+                extra=tuple(extras))
             sp.pool = jax.tree.map(lambda p, n: p.at[jidx].set(n),
                                    sp.pool, pool_n)
             sp.pos = sp.pos.at[jidx].set(pos_n)
@@ -939,11 +1192,11 @@ class ServeEngine:
             sp.pool, sp.pos, sp.keys, emitted, nvalid = \
                 self.engine.run_job(
                     job, lambda: jax.block_until_ready(fn(
-                        self.params, sp.pool, sp.pos, jnp.asarray(toks),
-                        jnp.asarray(n_given), jnp.asarray(active),
-                        jnp.asarray(sp.reset), sp.keys,
-                        jnp.asarray(temps))),
-                    extra=(pjob,))
+                        self.params, *dargs, sp.pool, sp.pos,
+                        jnp.asarray(toks), jnp.asarray(n_given),
+                        jnp.asarray(active), jnp.asarray(sp.reset),
+                        sp.keys, jnp.asarray(temps))),
+                    extra=tuple(extras))
             sp.reset[:] = False           # zeroing landed inside the jit
             em = np.asarray(emitted)
             nv = np.asarray(nvalid).astype(np.int64)
@@ -991,9 +1244,14 @@ class ServeEngine:
             self.spec_ticks += 1
             self.spec_proposed += proposed
             self.spec_accepted += accepted
+            st = self.spec_arms.setdefault(
+                arm, {"ticks": 0, "proposed": 0, "accepted": 0})
+            st["ticks"] += 1
+            st["proposed"] += proposed
+            st["accepted"] += accepted
             if proposed:
                 self.engine.observe_accept(sp.pool_id,
-                                           accepted / proposed)
+                                           accepted / proposed, arm=arm)
         self._age_prefills(part)
         self.tokens_out += n_new
         self._check_breakpoints(n_new)

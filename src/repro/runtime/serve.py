@@ -64,7 +64,8 @@ class BatchedServer:
                  slots: int = 4, prefill_chunk: int = 16,
                  decode_chunk: int = 4, spec_decode: bool = False,
                  pools: int = 1, class_pools: Optional[Dict] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, draft: Optional[str] = None,
+                 draft_cfg: Optional[ArchConfig] = None, draft_params=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -77,6 +78,12 @@ class BatchedServer:
         # cross-request prefix cache + exact-hit result cache (cfg.serve
         # knobs size it); greedy outputs stay bit-identical with it on
         self.prefix_cache = prefix_cache
+        # draft-model proposer: "self" slices a truncated self-draft from
+        # params, or pass an independent draft_cfg+draft_params (e.g. one
+        # distilled by repro.engine.draft.distill_draft)
+        self.draft = draft
+        self.draft_cfg = draft_cfg
+        self.draft_params = draft_params
         self._step = None                # static-path jit, built on demand
         self._engine = None
 
@@ -89,7 +96,8 @@ class BatchedServer:
                 decode_chunk=self.decode_chunk, seed=seed,
                 spec_decode=self.spec_decode, pools=self.pools,
                 class_pools=self.class_pools,
-                prefix_cache=self.prefix_cache)
+                prefix_cache=self.prefix_cache, draft=self.draft,
+                draft_cfg=self.draft_cfg, draft_params=self.draft_params)
         return self._engine
 
     def submit(self, prompt, max_new: int = 16, temperature: float = 0.0,

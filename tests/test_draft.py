@@ -1,0 +1,179 @@
+"""Draft-model proposer family: config/param slicing, state threading, and
+the engine's per-arm arbitration (repro.engine.draft + the draft arm of
+engine.serve).  The bit-identicality sweeps live in
+tests/test_serve_differential.py; here are the targeted unit properties."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.engine.draft import (distill_draft, greedy_streams,
+                                slice_draft_params, small_draft_cfg,
+                                truncated_draft_cfg)
+from repro.engine.serve import ServeEngine
+from repro.models import lm
+
+from conftest import PYTEST_SEED
+
+CFG = get_arch("gemma3-1b-smoke")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init(CFG, jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------ config slicing
+
+def test_truncated_draft_cfg_is_a_pattern_prefix():
+    d = truncated_draft_cfg(CFG, 2)
+    assert d.pattern == CFG.pattern[:2]
+    assert d.num_layers == 2
+    # every width is the target's: the self-draft params are SLICES
+    assert (d.d_model, d.n_heads, d.vocab) == \
+        (CFG.d_model, CFG.n_heads, CFG.vocab)
+    with pytest.raises(AssertionError):
+        truncated_draft_cfg(CFG, CFG.num_layers)     # must be a strict prefix
+    with pytest.raises(AssertionError):
+        truncated_draft_cfg(CFG, 0)
+
+
+def test_slice_draft_params_shapes_and_aliasing(params):
+    dcfg = truncated_draft_cfg(CFG, 2)
+    dp = slice_draft_params(params, CFG, dcfg)
+    # stacked leading dims shrink to the prefix's per-type counts
+    counts = {}
+    for t in dcfg.pattern:
+        counts[t] = counts.get(t, 0) + 1
+    for t, n in counts.items():
+        for leaf in jax.tree.leaves(dp[t]):
+            assert leaf.shape[0] == n
+    # shared head groups ride along whole
+    for k in ("embed", "final_ln", "lm_head"):
+        if k in params:
+            assert jax.tree.structure(dp[k]) == jax.tree.structure(params[k])
+    # slices are fresh buffers: donating/updating the target cannot alias
+    t0 = dcfg.pattern[0]
+    leaf = jax.tree.leaves(dp[t0])[0]
+    src = jax.tree.leaves(params[t0])[0]
+    assert leaf.unsafe_buffer_pointer() != src.unsafe_buffer_pointer()
+    # the sliced tree actually runs as a model
+    st = lm.init_cache(dcfg, 1, 8)
+    logits, _ = lm.decode_step(dp, st, jnp.ones((1, 1), jnp.int32), dcfg)
+    assert logits.shape == (1, CFG.vocab)
+
+
+def test_small_draft_cfg_dims():
+    d = small_draft_cfg(CFG, layers=1, d_model=32, n_heads=2)
+    assert d.num_layers == 1 and d.pattern == CFG.pattern[:1]
+    assert d.d_model == 32 and d.vocab == CFG.vocab
+    p = lm.init(d, jax.random.PRNGKey(1))
+    st = lm.init_cache(d, 1, 8)
+    logits, _ = lm.decode_step(p, st, jnp.ones((1, 1), jnp.int32), d)
+    assert logits.shape == (1, CFG.vocab)
+
+
+# -------------------------------------------------------- plain-arm threading
+
+def test_draft_threading_never_changes_plain_outputs(params):
+    """With a draft loaded but spec off, every tick still advances the
+    draft rows (the shadow feed) — outputs must equal the draft-free
+    engine's bit for bit, greedy and sampled alike."""
+    rng = np.random.default_rng(PYTEST_SEED + 5)
+    prompts = rng.integers(1, CFG.vocab, (3, 7)).astype(np.int32)
+    ref = ServeEngine(CFG, params, max_len=64).generate(
+        prompts, max_new=8, seed=3)
+    got = ServeEngine(CFG, params, max_len=64, draft="self").generate(
+        prompts, max_new=8, seed=3)
+    np.testing.assert_array_equal(got, ref)
+    # sampled traffic too: the draft feed must not touch the key stream
+    ref_s = ServeEngine(CFG, params, max_len=64).generate(
+        prompts, max_new=8, temperature=0.9, seed=4)
+    got_s = ServeEngine(CFG, params, max_len=64, draft="self").generate(
+        prompts, max_new=8, temperature=0.9, seed=4)
+    np.testing.assert_array_equal(got_s, ref_s)
+
+
+def test_draft_rows_live_in_pool_and_reset_on_join(params):
+    eng = ServeEngine(CFG, params, max_len=64, slots=2, draft="self",
+                      spec_decode=True)
+    sp = eng.pools[0]
+    assert "draft" in sp.pool
+    for leaf in jax.tree.leaves(sp.pool["draft"]):
+        assert leaf.shape[0] == sp.slots
+    # churn requests through the two slots; draft state never leaks (the
+    # differential harness pins outputs; here just exercise re-join)
+    rng = np.random.default_rng(PYTEST_SEED)
+    for _ in range(2):
+        prompts = rng.integers(1, CFG.vocab, (4, 5)).astype(np.int32)
+        eng.generate(prompts, max_new=4)
+    assert not any(r is not None for r in eng.active)
+
+
+def test_snapshot_rows_carry_draft_state(params):
+    """Prefix-cache snapshots capture the whole pool row — draft leaves
+    included — so a seeded slot resumes with a warm draft."""
+    eng = ServeEngine(CFG, params, max_len=64, slots=2, prefill_chunk=4,
+                      draft="self", prefix_cache=True)
+    rng = np.random.default_rng(PYTEST_SEED + 9)
+    prompt = rng.integers(1, CFG.vocab, (12,)).astype(np.int32)
+    eng.generate(prompt[None], max_new=4)
+    snaps = [n for n in [eng.prefix.lookup(prompt[:k])
+                         for k in range(4, 13)]
+             if n is not None and n.snapshot is not None]
+    assert snaps, "no prefix snapshot was captured"
+    assert "draft" in snaps[0].snapshot
+    # a second, prefix-sharing request seeds from it and stays identical
+    ext = np.concatenate([prompt, rng.integers(1, CFG.vocab, (3,))
+                          .astype(np.int32)])
+    ref = ServeEngine(CFG, params, max_len=64).generate(ext[None],
+                                                        max_new=6)
+    got = eng.generate(ext[None], max_new=6)
+    np.testing.assert_array_equal(got, ref)
+    assert eng.prefix.seeded >= 1
+
+
+# ------------------------------------------------------------------- distill
+
+@pytest.mark.slow
+def test_distilled_draft_reaches_high_acceptance(params):
+    """The distillation recipe: a tiny independent draft trained on the
+    target's own greedy streams must reach high argmax agreement — enough
+    that the draft arm's accepted/proposed ratio beats any n-gram table on
+    non-repetitive traffic."""
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, CFG.vocab, (8,)).astype(np.int32)
+               for _ in range(6)]
+    dcfg = small_draft_cfg(CFG)
+    dparams = distill_draft(CFG, params, dcfg, prompts, max_new=48,
+                            steps=300, seed=PYTEST_SEED)
+    eng = ServeEngine(CFG, params, max_len=96, slots=2, prefill_chunk=4,
+                      decode_chunk=4, spec_decode=True, draft_cfg=dcfg,
+                      draft_params=dparams)
+    orig = eng.engine.choose_serve_tick
+    eng.engine.choose_serve_tick = lambda *a, **k: (
+        "spec:draft" if orig(*a, **k) != "prefill"
+        and k.get("spec_len", 0) > 1 else orig(*a, **k))
+    outs = eng.generate(np.stack(prompts[:4]), max_new=32)
+    ref = ServeEngine(CFG, params, max_len=96).generate(
+        np.stack(prompts[:4]), max_new=32)
+    np.testing.assert_array_equal(outs, ref)
+    st = eng.spec_arms["draft"]
+    assert st["proposed"] > 0
+    assert st["accepted"] / st["proposed"] >= 0.5, st
+
+
+@pytest.mark.slow
+def test_greedy_streams_match_serve_outputs(params):
+    """The distillation teacher (batched scan rollout) and the serve path
+    agree on greedy continuations — the teacher trains the draft on
+    exactly the traffic it will propose for."""
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(1, CFG.vocab, (6,)).astype(np.int32)
+               for _ in range(3)]
+    streams = greedy_streams(CFG, params, prompts, max_new=8, max_len=32)
+    ref = ServeEngine(CFG, params, max_len=32).generate(
+        np.stack(prompts), max_new=8)
+    for s, p, r in zip(streams, prompts, ref):
+        np.testing.assert_array_equal(s[len(p):], r)

@@ -138,19 +138,20 @@ def test_serve_decode_workflow_commit_cardinality_tracks_acceptance():
 def test_choose_serve_tick_spec_arm_switches_on_measured_acceptance():
     """The acceptance-criteria test: with measured runtimes fixed, driving
     the pool's acceptance-rate EMA high vs low flips the decode arm."""
+    from repro.engine import spec_kind
     eng = Engine()
     # fresh engine explores the speculative arm first: acceptance can only
     # be measured by running it
-    assert eng.choose_serve_tick(2, 0, 0, 4, 16, spec_len=4) == "spec"
+    assert eng.choose_serve_tick(2, 0, 0, 4, 16, spec_len=4) == "spec:ngram"
     # measured: the verify step is a bit cheaper per scan step than the
     # sampling decode step (first observation per kind is warm-up-skipped)
     for _ in range(3):
         eng.observe(Job("serve_decode", tokens=100), 1.0e-2)
-        eng.observe(Job("serve_spec_decode", tokens=100), 0.8e-2)
+        eng.observe(Job(spec_kind("ngram"), tokens=100), 0.8e-2)
     for _ in range(4):
         eng.observe_accept(0, 0.9)
-    assert eng.choose_serve_tick(2, 0, 0, 4, 16, spec_len=4) == "spec"
-    assert eng.decisions[-1]["scores"]["spec"] < \
+    assert eng.choose_serve_tick(2, 0, 0, 4, 16, spec_len=4) == "spec:ngram"
+    assert eng.decisions[-1]["scores"]["spec:ngram"] < \
         eng.decisions[-1]["scores"]["decode"]
     # an incompressible workload drives acceptance to ~0: the expected
     # commits collapse to 1 per tick and the plain arm wins back
@@ -158,23 +159,97 @@ def test_choose_serve_tick_spec_arm_switches_on_measured_acceptance():
         eng.observe_accept(0, 0.0)
     assert eng.choose_serve_tick(2, 0, 0, 4, 16, spec_len=4) == "decode"
     assert eng.decisions[-1]["scores"]["decode"] < \
-        eng.decisions[-1]["scores"]["spec"]
+        eng.decisions[-1]["scores"]["spec:ngram"]
     # no speculative offer -> plain decode, regardless of EMAs
     assert eng.choose_serve_tick(2, 0, 0, 4, 16, spec_len=0) == "decode"
 
 
 def test_choose_serve_tick_spec_arm_reexplores_loser():
+    from repro.engine import spec_kind
     eng = Engine()
     for _ in range(3):
         eng.observe(Job("serve_decode", tokens=100), 1.0e-2)
-        eng.observe(Job("serve_spec_decode", tokens=100), 1.0e-2)
+        eng.observe(Job(spec_kind("ngram"), tokens=100), 1.0e-2)
     for _ in range(8):
         eng.observe_accept(0, 0.0)        # spec is the losing arm
     picks = [eng.choose_serve_tick(2, 0, 0, 4, 16, spec_len=4)
              for _ in range(16)]
     assert picks[:15] == ["decode"] * 15
-    assert picks[15] == "spec"            # every 16th round re-explores
+    assert picks[15] == "spec:ngram"      # every 16th round re-explores
     assert eng.decisions[-1]["why"] == "re-explore"
+
+
+def test_choose_decode_arm_family_prices_each_proposer():
+    """Three-arm family {plain, spec:ngram, spec:draft}: each spec arm is
+    bootstrapped independently, then priced from its OWN acceptance and
+    runtime EMAs — a strong draft beats both the plain arm and a collapsed
+    ngram arm, and per-arm acceptance keeps them distinguishable."""
+    from repro.engine import spec_kind
+    eng = Engine()
+    arms = ("ngram", "draft")
+    # both spec arms bootstrap first (each needs its own EMAs)
+    first = eng.choose_serve_tick(2, 0, 0, 4, 16, spec_len=4, arms=arms)
+    assert first.startswith("spec:")
+    assert eng.decisions[-1]["why"] == "bootstrap"
+    for _ in range(3):
+        eng.observe(Job("serve_decode", tokens=100), 1.0e-2)
+        eng.observe(Job(spec_kind("ngram"), tokens=100), 0.8e-2)
+        eng.observe(Job(spec_kind("draft"), tokens=100), 0.9e-2)
+    # ngram collapsed on this workload, the draft keeps proposing well
+    for _ in range(8):
+        eng.observe_accept(0, 0.05, arm="ngram")
+        eng.observe_accept(0, 0.9, arm="draft")
+    pick = eng.choose_serve_tick(2, 0, 0, 4, 16, spec_len=4, arms=arms)
+    assert pick == "spec:draft"
+    scores = eng.decisions[-1]["scores"]
+    assert set(scores) == {"decode", "spec:ngram", "spec:draft"}
+    assert scores["spec:draft"] < scores["decode"] < scores["spec:ngram"]
+    # telemetry carries the CostBook inputs the decision saw
+    inputs = eng.decisions[-1]["inputs"]
+    assert inputs["accept:draft"] > inputs["accept:ngram"]
+    # a measured ngram tick must NOT suppress the draft arm's bootstrap:
+    # per-arm runtimes have no aggregate fallback
+    eng2 = Engine()
+    for _ in range(3):
+        eng2.observe(Job("serve_decode", tokens=100), 1.0e-2)
+        eng2.observe(Job(spec_kind("ngram"), tokens=100), 0.8e-2)
+    for _ in range(4):
+        eng2.observe_accept(0, 0.5, arm="ngram")
+    assert eng2.choose_serve_tick(2, 0, 0, 4, 16, spec_len=4,
+                                  arms=arms) == "spec:draft"
+    assert eng2.decisions[-1]["why"] == "bootstrap"
+
+
+def test_choose_compact_is_a_measured_layout_arm():
+    """Tick layout (compact gather vs full-pool vmap) is decided from
+    per-pool per-token EMAs recorded on layout-eligible ticks."""
+    from repro.engine import layout_kind
+    eng = Engine()
+    # bootstrap: try compact first (its EMA can only come from running it)
+    assert eng.choose_compact(0) is True
+    assert eng.decisions[-1]["why"] == "bootstrap"
+    for _ in range(3):
+        eng.observe(Job(layout_kind(True, 0), tokens=100), 1.0e-2)
+    assert eng.choose_compact(0) is False     # full side unmeasured next
+    assert eng.decisions[-1]["why"] == "explore"
+    for _ in range(3):
+        eng.observe(Job(layout_kind(False, 0), tokens=100), 2.0e-2)
+    assert eng.choose_compact(0) is True      # compact measured cheaper
+    s = eng.decisions[-1]["scores"]
+    assert s["compact"] < s["full"]
+    # flip the measurements: full wins back
+    eng2 = Engine()
+    for _ in range(3):
+        eng2.observe(Job(layout_kind(True, 0), tokens=100), 3.0e-2)
+        eng2.observe(Job(layout_kind(False, 0), tokens=100), 1.0e-2)
+    assert eng2.choose_compact(0) is False
+    # re-explore: every 16th measured round runs the losing layout (the
+    # assert above consumed round 1, so the 16th lands at picks[14])
+    picks = [eng2.choose_compact(0) for _ in range(16)]
+    assert picks[:14] == [False] * 14
+    assert picks[14] is True
+    assert any(d.get("why") == "re-explore"
+               for d in list(eng2.decisions)[-16:])
 
 
 def test_choose_serve_tick_aging_bounds_prefill_starvation():

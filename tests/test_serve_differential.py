@@ -7,7 +7,8 @@ join/evict pressure (more requests than slots), control-message
 interleavings delivered between ticks, and hot config updates — and asserts
 that ``ServeEngine`` greedy outputs are **bit-identical** to the static
 ``BatchedServer.generate_static`` oracle across ``compact_decode`` ×
-``spec_decode`` × ``prefix_cache`` × ``pools`` (scenarios mix a shared
+``spec_decode`` × ``proposer/draft`` × ``prefix_cache`` × ``pools``
+(scenarios mix a shared
 prompt preamble in so the prefix-cache axis exercises seeded admissions
 and result-cache hits, not just the miss path; multi-pool runs take the weighted-FRT
 ``choose_serve_job`` arbitration; the priority-class-specific paths are
@@ -46,7 +47,11 @@ MAX_LEN = 64
 SLOTS = (1, 2, 3)
 PREFILL_CHUNKS = (1, 2, 4, 8)
 DECODE_CHUNKS = (1, 2, 4)
-CTL_KINDS = ("pause_batch", "update_chunks", "toggle_spec")
+CTL_KINDS = ("pause_batch", "update_chunks", "toggle_spec", "update_draft")
+# draft-proposer axis: no draft / truncated self-draft (random-init, so its
+# acceptance is ~0 — the all-reject path) / the target itself as draft
+# (acceptance ~1 — the max-commit path).  Both ends must be bit-identical.
+DRAFTS = (None, "self", "target")
 
 
 @lru_cache(maxsize=None)
@@ -69,11 +74,12 @@ def oracle(prompt, max_new):
     return _ORACLE[key]
 
 
-def _ctl_batch(ctl, kind, rng):
+def _ctl_batch(eng, kind, rng):
     """Deliver one control batch into the mailbox.  A pause is always
     accompanied by a resume in the same batch — the engine's poll blocks
     while paused, so an unpaired pause would deadlock the single-threaded
     driver (the threaded pause path is covered in test_serve_consistency)."""
+    ctl = eng.engine.controller
     if kind == "pause_batch":
         ctl.send(M.pause())
         ctl.send(M.inspect())
@@ -84,6 +90,15 @@ def _ctl_batch(ctl, kind, rng):
                           prefill_chunk=int(rng.choice(PREFILL_CHUNKS))))
     elif kind == "toggle_spec":
         ctl.send(M.update(spec_decode=bool(rng.integers(2))))
+    elif kind == "update_draft":
+        # hot draft republish mid-stream, with deliberately *garbage*
+        # weights: a draft can only change acceptance, never outputs.
+        # (On draft-free engines the update is a silent no-op.)
+        if eng.draft_params is not None:
+            ctl.send(M.update(draft_params=jax.tree.map(
+                lambda x: -x, eng.draft_params)))
+        else:
+            ctl.send(M.update(draft_params=None))
 
 
 def _gen_prompts(rng, n_req):
@@ -111,6 +126,7 @@ def gen_scenario(rng):
         "decode_chunk": int(rng.choice(DECODE_CHUNKS)),
         "compact": bool(rng.integers(2)),
         "spec": bool(rng.integers(2)),
+        "draft": DRAFTS[int(rng.integers(len(DRAFTS)))],
         # cross-request prefix cache + result cache: seeded admissions and
         # exact-hit answers must leave greedy outputs bit-identical
         "prefix_cache": bool(rng.integers(2)),
@@ -126,6 +142,16 @@ def gen_scenario(rng):
     }
 
 
+def _draft_kwargs(sc, params):
+    d = sc.get("draft")
+    if d == "self":
+        return {"draft": "self"}
+    if d == "target":
+        # the target as its own draft: max-acceptance end of the axis
+        return {"draft_cfg": CFG, "draft_params": params}
+    return {}
+
+
 def run_scenario(sc):
     params, _ = _fixture()
     eng = ServeEngine(CFG, params, max_len=MAX_LEN, slots=sc["slots"],
@@ -133,14 +159,15 @@ def run_scenario(sc):
                       decode_chunk=sc["decode_chunk"],
                       compact_decode=sc["compact"],
                       spec_decode=sc["spec"], pools=sc.get("pools", 1),
-                      prefix_cache=sc.get("prefix_cache", False))
+                      prefix_cache=sc.get("prefix_cache", False),
+                      **_draft_kwargs(sc, params))
     reqs = [eng.submit(p, max_new=n)
             for p, n in zip(sc["prompts"], sc["max_news"])]
     ctl_rng = np.random.default_rng(sc["ctl_seed"])
     ticks = 0
     while eng.queue or any(r is not None for r in eng.active):
         if ticks in sc["schedule"]:
-            _ctl_batch(eng.engine.controller, sc["schedule"][ticks], ctl_rng)
+            _ctl_batch(eng, sc["schedule"][ticks], ctl_rng)
         assert eng.tick(), "engine stopped unexpectedly"
         ticks += 1
         assert ticks < 1000, "serve engine did not drain"
@@ -151,6 +178,7 @@ def run_scenario(sc):
             err_msg=(f"req {i}: plen={len(p)} max_new={n} slots={sc['slots']}"
                      f" pc={sc['prefill_chunk']} dc={sc['decode_chunk']}"
                      f" compact={sc['compact']} spec={sc['spec']}"
+                     f" draft={sc.get('draft')}"
                      f" pools={sc.get('pools', 1)}"
                      f" prefix_cache={sc.get('prefix_cache', False)}"
                      f" schedule={sc['schedule']}"))
@@ -196,6 +224,53 @@ def test_differential_spec_forced_arm():
                                       err_msg=f"plen={len(p)}")
 
 
+@pytest.mark.parametrize("draft", ("self", "target"))
+def test_differential_spec_forced_draft_arm(draft):
+    """Pin the DRAFT proposer arm on for every decode tick, at both ends of
+    the acceptance spectrum: a truncated self-draft of a random-init target
+    proposes garbage (all-reject path), the target-as-draft proposes
+    perfectly (multi-token commits) — greedy outputs must be bit-identical
+    either way, including under prefix-cache seeding and a mid-stream hot
+    draft-param swap."""
+    params, _ = _fixture()
+    rng = np.random.default_rng(PYTEST_SEED + 177)
+    kw = {"draft": "self"} if draft == "self" \
+        else {"draft_cfg": CFG, "draft_params": params}
+    eng = ServeEngine(CFG, params, max_len=MAX_LEN, slots=2,
+                      prefill_chunk=4, decode_chunk=2, spec_decode=True,
+                      prefix_cache=True, **kw)
+    orig = eng.engine.choose_serve_tick
+
+    def force_draft(*a, **k):
+        mode = orig(*a, **k)
+        return "spec:draft" if mode.startswith(("decode", "spec")) \
+            and k.get("spec_len", 0) > 1 else mode
+
+    eng.engine.choose_serve_tick = force_draft
+    shared = rng.integers(1, CFG.vocab, (6,)).astype(np.int32)
+    prompts = [np.concatenate([shared,
+                               rng.integers(1, CFG.vocab, (l,)).astype(
+                                   np.int32)]) for l in (3, 7, 2)]
+    reqs = [eng.submit(p, max_new=12) for p in prompts]
+    # run until at least one draft-arm tick has actually proposed, THEN
+    # hot-swap in garbage weights mid-stream: acceptance-only
+    ticks = 0
+    while eng.spec_arms.get("draft", {}).get("proposed", 0) == 0:
+        assert eng.tick() and ticks < 200
+        ticks += 1
+    eng.engine.controller.send(M.update(
+        draft_params=jax.tree.map(lambda x: x * -1, eng.draft_params)))
+    eng.run_until_done()
+    assert eng.spec_arms["draft"]["ticks"] > 0
+    if draft == "target":
+        # before the garbage swap the target-as-draft proposals are exact;
+        # every proposed token of those ticks must have committed
+        assert eng.spec_accepted > 0
+    for p, r in zip(prompts, reqs):
+        np.testing.assert_array_equal(r.output(), oracle(p, 12),
+                                      err_msg=f"draft={draft} plen={len(p)}")
+
+
 # --------------------------------------------------- hypothesis-driven sweep
 
 try:
@@ -234,6 +309,7 @@ if HAVE_HYPOTHESIS:
                                       label="decode_chunk"),
             "compact": data.draw(st.booleans(), label="compact"),
             "spec": data.draw(st.booleans(), label="spec"),
+            "draft": data.draw(st.sampled_from(DRAFTS), label="draft"),
             "prefix_cache": data.draw(st.booleans(), label="prefix_cache"),
             "pools": data.draw(st.integers(1, 2), label="pools"),
             "schedule": data.draw(
