@@ -120,6 +120,21 @@ class ServeCfg:
     prefix_pin_count: int = 3
     prefix_history: int = 512
 
+    # Device placement (ServeEngine(placements={pool: mesh})): each slot
+    # pool may own a real device group; params are replicated (or
+    # tensor-parallel at pool_tp > 1) on the pool's mesh and the donated
+    # pool state lives there too, so pools on disjoint devices decode
+    # concurrently.  tp=1 is the bit-identicality-preserving default — a
+    # split matmul reduction reorders float adds.
+    pool_tp: int = 1
+    # co-dispatch decode ticks for OTHER placed pools in the same
+    # scheduling round (async dispatch overlaps them on disjoint devices).
+    # Inert without placements; the arbitration winner is unchanged.
+    parallel_ticks: bool = True
+    # max in-flight slots migrated per pool per drain step: bounds the
+    # per-tick migration stall a live drain_pool() injects.
+    migrate_batch: int = 4
+
 
 @dataclasses.dataclass(frozen=True)
 class SSMCfg:

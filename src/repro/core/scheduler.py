@@ -136,6 +136,19 @@ def weighted_first_response_time(wf: Workflow, choice: FrozenSet[Edge],
     return first_response_time(wf, choice, cm) / max(weight, 1e-9)
 
 
+def placement_adjusted_frt(frt: float, weight: float = 1.0,
+                           load: float = 0.0, xfer: float = 0.0) -> float:
+    """Weighted FRT with device-placement terms: ``load`` (busy fraction of
+    the candidate's device group) inflates the score multiplicatively — a
+    tick on a contended device finishes later than its pool-local EMA says —
+    and ``xfer`` (seconds of pending state migration headed at the pool)
+    adds the transfer the tick must wait behind.  Both default to zero, so
+    unplaced scheduling reduces to ``weighted_first_response_time``
+    exactly — the decision-identity the pre-placement tests pin."""
+    return (frt * (1.0 + max(load, 0.0)) + max(xfer, 0.0)) / max(weight,
+                                                                 1e-9)
+
+
 def compare_frt(candidates: Dict[str, Workflow], cm: CostModel,
                 weight: float = 1.0) -> Tuple[str, Dict[str, float]]:
     """Arbitrate named alternative workflows under (weighted) FRT: returns

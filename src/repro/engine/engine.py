@@ -47,6 +47,7 @@ from repro.core.controller import Controller
 from repro.core.estimator import CostBook
 from repro.core.scheduler import (CostModel, compare_frt, completion_time,
                                   first_response_time,
+                                  placement_adjusted_frt,
                                   weighted_first_response_time)
 from repro.engine import jobs as J
 
@@ -300,8 +301,12 @@ class Engine:
             chunk_now = min(c.pre_toks, c.chunk * max(c.n_pre, 1)) \
                 if c.mode == "prefill" else 0
             wf = J.serve_tick_workflow(c.n_dec, c.chunk, chunk_now, t_tok)
-            s = weighted_first_response_time(wf, frozenset(), self._cm,
-                                             c.weight)
+            frt = first_response_time(wf, frozenset(), self._cm)
+            # placement terms: device-group contention inflates the FRT, a
+            # pending migration headed at the pool adds the transfer the
+            # tick must wait behind.  Both are zero for unplaced pools, so
+            # this reduces exactly to weighted_first_response_time there.
+            s = placement_adjusted_frt(frt, c.weight, c.load, c.xfer)
             pool_scores[f"{c.mode}@p{c.pool_id}"] = s
             if s < best_score:
                 best, best_score = c, s
@@ -312,6 +317,53 @@ class Engine:
                 best.n_dec, best.chunk, best.spec_len, best.pool_id,
                 best.arms or ("ngram",))
         return best.pool_id, best.mode
+
+    def choose_admission_pool(self, opts: List[dict]) -> int:
+        """Placement-aware admission: pick which device-placed pool a newly
+        admitted request's slot lives on.  Each option is
+        ``{"pool": local_id, "free": int, "busy": float, "devices": int}``;
+        the score is the pool's measured per-token EMA inflated by its
+        device-group occupancy (``t_tok * (busy + 1)``) — the expected time
+        the new slot waits per token on that hardware — so a fast idle pool
+        beats a fast contended one, and a pool whose devices are shared
+        beats nothing for free.  Ties break on free slots (desc) then pool
+        id (asc), which reduces to the legacy most-free rule when no EMAs
+        separate the pools yet."""
+        assert opts, "choose_admission_pool needs at least one option"
+        scores = {}
+        best, best_key = None, None
+        for o in opts:
+            t_tok = self._pool_t_tok(o["pool"])
+            s = t_tok * (max(o.get("busy", 0.0), 0.0) + 1.0)
+            scores[f"p{o['pool']}"] = s
+            key = (s, -o.get("free", 0), o["pool"])
+            if best_key is None or key < best_key:
+                best, best_key = o["pool"], key
+        self._decide("admission_pool", f"p{best}", scores=scores)
+        return best
+
+    def choose_migration_dst(self, opts: List[dict]) -> int:
+        """Where a draining pool's in-flight slots land: the same
+        occupancy-inflated per-token score as admission, plus the measured
+        per-row migration cost (``serve_migrate`` EMA) of moving INTO the
+        candidate — a destination on the source's own devices copies for
+        near-free, a cross-mesh one pays the transfer."""
+        assert opts, "choose_migration_dst needs at least one option"
+        scores = {}
+        best, best_key = None, None
+        for o in opts:
+            t_tok = self._pool_t_tok(o["pool"])
+            t_mig = self.costs.estimate_first(
+                [J.pool_kind("serve_migrate", o["pool"]), "serve_migrate"],
+                J.COST_DEFAULTS["serve_migrate"])
+            s = t_tok * (max(o.get("busy", 0.0), 0.0) + 1.0) \
+                + t_mig / max(o.get("free", 1), 1)
+            scores[f"p{o['pool']}"] = s
+            key = (s, -o.get("free", 0), o["pool"])
+            if best_key is None or key < best_key:
+                best, best_key = o["pool"], key
+        self._decide("migration_dst", f"p{best}", scores=scores)
+        return best
 
     def choose_prefix_admission(self, cached_tokens: int,
                                 suffix_tokens: int,

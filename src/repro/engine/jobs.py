@@ -200,6 +200,11 @@ class TickCandidate:
     overdue: int = 0           # ticks past the tightest violated bound
     spec_len: int = 0          # >1: the speculative arm is offered
     arms: tuple = ()           # proposer arms offered ("ngram", "draft", ...)
+    # placement terms (0.0 without ServeEngine placements, which reduces
+    # the arbitration score to exactly the historical weighted FRT):
+    load: float = 0.0          # busy fraction of the pool's device group
+    xfer: float = 0.0          # pending migration cost (s) headed at the
+    #                            pool — priced from the serve_migrate EMA
 
 
 def accept_kind(pool_id: int, arm: str = "ngram") -> str:
@@ -352,5 +357,8 @@ COST_DEFAULTS: Dict[str, float] = {
     # prefill chunk by construction — the bootstrap must favor exploring
     # the seed arm so its real cost gets measured
     "serve_seed": 0.002,
+    # one batched cross-pool slot migration (gather + device_put + scatter);
+    # prior sits above the same-device seed write — it pays a transfer
+    "serve_migrate": 0.004,
     "checkpoint": 0.50,
 }

@@ -50,6 +50,19 @@ import dataclasses
 from collections import Counter, OrderedDict, deque
 from typing import Any, Dict, List, Optional, Tuple
 
+import jax
+import numpy as np
+
+
+def to_host(tree):
+    """Normalize a pytree of device arrays to **host numpy** — the
+    placement-portable form every prefix snapshot is stored in.  A host
+    snapshot is uncommitted, so a later seed write follows the *destination*
+    pool's placement regardless of which device group captured it; it also
+    survives the capturing pool being drained away.  ``device_get`` pulls
+    across any sharding; ``np.asarray`` pins the leaves as plain numpy."""
+    return jax.tree.map(np.asarray, jax.device_get(tree))
+
 
 def request_fingerprint(tokens, max_new: int, temperature: float,
                         params_version: int) -> Optional[tuple]:
@@ -85,7 +98,7 @@ class _Node:
     depth: int
     parent: Optional["_Node"] = None
     children: Dict[int, "_Node"] = dataclasses.field(default_factory=dict)
-    snapshot: Any = None          # pool-row pytree (device) or None
+    snapshot: Any = None          # pool-row pytree (host numpy) or None
     pos: int = 0                  # tokens consumed by the snapshot ( == depth)
     last_use: int = 0             # LRU clock value of the last hit/insert
     hits: int = 0
@@ -192,7 +205,9 @@ class PrefixCache:
 
     def insert(self, tokens, snapshot=None) -> Optional[_Node]:
         """Commit a token path into the tree, attaching ``snapshot`` (a
-        captured pool-row pytree) at its end.  Paths shorter than
+        captured pool-row pytree, normalized to host numpy via
+        :func:`to_host` by the capturing engine) at its end.  Paths shorter
+        than
         ``min_len`` are not worth a node; re-inserting an existing path
         refreshes its snapshot/LRU slot.  Returns the node (None when the
         path was rejected as too short)."""

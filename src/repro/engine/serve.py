@@ -89,6 +89,28 @@ Seeded state is bit-identical to recomputation by construction — the tick
 consumes tokens one ``lm.decode_step`` at a time, so the state after P
 tokens does not depend on chunking or on which slot ran them.
 
+**Device-placed pools + elastic scale** (``placements={pool: mesh}``): a
+slot pool may own a real device group — its params are committed to the
+pool's :func:`repro.runtime.sharding.pool_mesh` (replicated at the default
+``serve.pool_tp=1``, tensor-parallel above it) and its donated pool state
+lives there under :func:`pool_specs` — so decode ticks for pools on
+disjoint devices overlap: the scheduling round still picks ONE arbitration
+winner, but with ``serve.parallel_ticks`` the engine co-dispatches plain
+decode ticks for the other placed pools in the same round (async dispatch;
+each pool's measured time is its elapsed-from-round-start, so the EMAs see
+the overlapped reality).  Placement feeds back into the decisions:
+candidate ticks carry a device-group *load* term and a pending-migration
+*transfer* term (``scheduler.placement_adjusted_frt``), and admission onto
+placed pools is an engine decision over occupancy-inflated per-token EMAs
+(``Engine.choose_admission_pool``).  Pools are elastic under load:
+``add_pool()`` joins a new (optionally placed) pool, ``drain_pool()``
+stops admission and live-migrates the in-flight slots — full pool rows,
+positions and PRNG keys, moved by a jitted gather → ``device_put`` →
+jitted batched scatter path (``_migrate_slots``) — then retires the empty
+pool.  A slot's row + position + key fully determine its continuation, so
+greedy outputs are bit-identical across any migration, and zero requests
+drop.
+
 Scheduling objective: serving minimizes (weighted) **first-response time**
 — a user is waiting on the first token — where training minimizes
 completion time; see ``core.scheduler`` for both objectives.
@@ -124,14 +146,17 @@ from typing import Any, Deque, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core.breakpoints import GlobalCountBreakpoint, LocalBreakpoint
 from repro.engine.engine import Engine
-from repro.engine.jobs import (Job, TickCandidate, layout_kind, pool_kind,
-                               spec_kind)
-from repro.engine.prefix_cache import PrefixAnalyzer, PrefixCache
+from repro.engine.jobs import (COST_DEFAULTS, Job, TickCandidate,
+                               layout_kind, pool_kind, spec_kind)
+from repro.engine.prefix_cache import PrefixAnalyzer, PrefixCache, to_host
 from repro.models import lm
+from repro.runtime.sharding import (axis_size, named, param_specs, pool_mesh,
+                                    pool_specs)
 
 
 def sample_traced(logits, key, temp):
@@ -462,6 +487,18 @@ def build_seed_write(cfg: ArchConfig):
     return jax.jit(seed, donate_argnums=(0, 1))
 
 
+@functools.lru_cache(maxsize=None)
+def build_pool_gather(cfg: ArchConfig):
+    """Jitted batched row gather — the capture side of slot migration: ``k``
+    slots' full pool rows (every cache leaf, n-gram table + context window,
+    draft rows) plus their positions and PRNG keys as fresh buffers, ready
+    to ``device_put`` at the destination placement.  Memoized per cfg; the
+    jit re-specializes per source sharding, so one build covers every
+    placed pool."""
+    return jax.jit(lambda pool, pos, keys, idx: (
+        jax.tree.map(lambda p: p[idx], pool), pos[idx], keys[idx]))
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -507,12 +544,25 @@ class SlotPool:
     engine-visible identity: tick jobs are recorded under
     ``jobs.pool_kind(kind, pool_id)`` (the per-pool cost EMAs the
     weighted-FRT arbitration scores) and acceptance under
-    ``jobs.accept_kind(pool_id, arm)``."""
+    ``jobs.accept_kind(pool_id, arm)``.
+
+    ``mesh`` (not None) *places* the pool: the donated state is committed
+    to the mesh's devices under :func:`repro.runtime.sharding.pool_specs`
+    (slot dim over ``data`` when divisible, trailing dims over ``model``
+    at pool_tp > 1 — both reduction-free splits, so placement never
+    touches bit-identicality), and the engine keeps a params copy on the
+    same devices (``ServeEngine._params_for``).  ``lid`` is the pool's
+    stable engine-local id: list position changes as pools drain away, the
+    lid never does (requests address pools by it)."""
 
     def __init__(self, cfg: ArchConfig, pool_id: int, slots: int,
                  max_len: int, base_key,
-                 draft_cfg: Optional[ArchConfig] = None):
+                 draft_cfg: Optional[ArchConfig] = None,
+                 mesh: Optional[Mesh] = None, lid: int = 0):
         self.pool_id = pool_id
+        self.lid = lid
+        self.mesh = mesh
+        self.draining = False
         self.slots = slots
         one = lm.init_cache(cfg, 1, max_len)
         self.pool = {
@@ -536,10 +586,57 @@ class SlotPool:
         self.pos_host = np.zeros((slots,), np.int64)   # device-sync-free view
         self.reset = np.zeros((slots,), bool)          # zero these rows in-jit
         self.keys = jax.random.split(base_key, slots)
+        if mesh is not None:
+            state = {"pool": self.pool, "pos": self.pos, "keys": self.keys}
+            placed = jax.device_put(state,
+                                    named(mesh, pool_specs(mesh, state)))
+            self.pool, self.pos, self.keys = \
+                placed["pool"], placed["pos"], placed["keys"]
         self.active: List[Optional[Request]] = [None] * slots
 
     def free_slots(self) -> int:
         return sum(r is None for r in self.active)
+
+    def devices(self) -> tuple:
+        """The device group this pool's state lives on (the default device
+        for unplaced pools) — the disjointness key for parallel group ticks
+        and the identity of the engine's placed-params cache."""
+        if self.mesh is not None:
+            return tuple(self.mesh.devices.flat)
+        return (jax.devices()[0],)
+
+    def put(self, x):
+        """Commit a value (pytree ok) to this pool's placement, replicated.
+        Host/uncommitted inputs and rows gathered on ANOTHER pool's mesh
+        both land here as local buffers, so the following eager scatter or
+        seed-write jit runs entirely on this pool's devices."""
+        if self.mesh is not None:
+            return jax.device_put(x, NamedSharding(self.mesh, P()))
+        return jax.device_put(x, jax.devices()[0])
+
+
+@dataclasses.dataclass
+class _TickPlan:
+    """One planned tick, built by ``ServeEngine._plan_tick`` and not yet
+    run: the resolved arm/length/participants/layout plus an **async**
+    dispatch thunk (launches the jit, does NOT block).  Splitting plan →
+    dispatch → commit is what lets one scheduling round co-dispatch ticks
+    for several device-placed pools and overlap them before blocking on
+    any (the parallel group-tick path)."""
+    sp: SlotPool
+    mode: str
+    spec: bool
+    arm: str
+    L: int
+    part: List[Request]
+    part_slots: List[int]
+    n_given: np.ndarray
+    idx: np.ndarray
+    compact: bool
+    compact_ok: bool
+    job: Job
+    extras: tuple
+    dispatch: Any
 
 
 class ServeEngine:
@@ -553,7 +650,8 @@ class ServeEngine:
                  prefix_cache: bool = False, params_version: int = 0,
                  draft: Optional[str] = None,
                  draft_cfg: Optional[ArchConfig] = None,
-                 draft_params=None):
+                 draft_params=None,
+                 placements: Optional[Dict[int, Any]] = None):
         self.cfg = cfg
         self.params = params
         self.engine = engine or Engine()
@@ -622,16 +720,36 @@ class ServeEngine:
                 f"class_pools[{cls!r}]={pids}: pool ids must be in " \
                 f"[0, {max(int(pools), 1)})"
         self._base_key = jax.random.PRNGKey(seed)
+        # device placement table: local pool id -> Mesh.  Values accepted
+        # as a Mesh, a single jax.Device, or a device sequence (normalized
+        # through runtime.sharding.pool_mesh at cfg.serve.pool_tp).  Pools
+        # not listed stay on the default device — the legacy layout.
+        self.placements: Dict[int, Mesh] = {}
+        for i, plc in (placements or {}).items():
+            assert 0 <= int(i) < max(int(pools), 1), \
+                f"placements[{i}]: no such pool (pools={pools})"
+            self.placements[int(i)] = self._as_mesh(plc)
+        # per-device-group params copies for placed pools, built lazily on
+        # first tick and invalidated by identity when params/draft_params
+        # are hot-swapped (ServeEngine._params_for)
+        self._pool_params: Dict[tuple, Dict[str, Any]] = {}
         # pool registry: each pool its own donated device state; pool 0
         # derives its slot keys straight from the engine seed (the exact
-        # pre-multi-pool layout), later pools fold their index in
+        # pre-multi-pool layout), later pools fold their index in.  List
+        # position is transient (drained pools drop out); ``lid`` is the
+        # stable identity requests/routing address pools by.
         self.pools: List[SlotPool] = [
             SlotPool(cfg, pool_id + i, slots, max_len,
                      self._base_key if i == 0
                      else jax.random.fold_in(self._base_key,
                                              0x7F000000 + i),
-                     draft_cfg=self.draft_cfg)
+                     draft_cfg=self.draft_cfg,
+                     mesh=self.placements.get(i), lid=i)
             for i in range(max(int(pools), 1))]
+        self._next_local = max(int(pools), 1)
+        self._last_mig_dst: Optional[int] = None
+        self.migrated_slots = 0
+        self.parallel_group_ticks = 0
         self._tick = build_slot_tick(cfg, 0, self.draft_cfg)
         self._compiled: set = set()    # (spec, tick_len, rows) already jitted
         # cross-request prefix cache + result cache (module docstring):
@@ -671,6 +789,180 @@ class ServeEngine:
         oracle."""
         return len(self.pools) == 1 and len(self.classes) == 1
 
+    # ------------------------------------------------------------- placement
+    def _as_mesh(self, plc) -> Mesh:
+        """Normalize a placement value (Mesh | Device | device sequence)
+        to a pool mesh at the configured tensor-parallel degree."""
+        if isinstance(plc, Mesh):
+            return plc
+        if isinstance(plc, (list, tuple)):
+            return pool_mesh(plc, self.cfg.serve.pool_tp)
+        return pool_mesh([plc], self.cfg.serve.pool_tp)
+
+    def _pool(self, lid: int) -> Optional[SlotPool]:
+        """Pool by stable local id (None once drained away)."""
+        for sp in self.pools:
+            if sp.lid == lid:
+                return sp
+        return None
+
+    def _params_for(self, sp: SlotPool):
+        """(target params, draft params) committed to the pool's placement.
+        Unplaced pools share the engine's own references; placed pools get
+        a per-device-group copy — replicated at pool_tp=1 (the
+        bit-identicality default), tensor-parallel under the
+        ``param_specs`` rules when the pool mesh carries a model axis.
+        Cached by device group and invalidated by source identity, so a hot
+        ``draft_params`` republish reaches placed pools on their next
+        tick."""
+        if sp.mesh is None:
+            return self.params, self.draft_params
+        ent = self._pool_params.setdefault(sp.devices(), {})
+        if ent.get("src") is not self.params:
+            if axis_size(sp.mesh, "model") > 1:
+                sh = named(sp.mesh, param_specs(self.cfg, sp.mesh,
+                                                fsdp=False))
+            else:
+                sh = NamedSharding(sp.mesh, P())
+            ent["params"] = jax.device_put(self.params, sh)
+            ent["src"] = self.params
+        if self.draft_cfg is not None and \
+                ent.get("dsrc") is not self.draft_params:
+            ent["draft"] = jax.device_put(self.draft_params,
+                                          NamedSharding(sp.mesh, P()))
+            ent["dsrc"] = self.draft_params
+        return ent["params"], ent.get("draft")
+
+    def _group_busy(self, sp: SlotPool) -> float:
+        """Occupancy fraction of the OTHER pools sharing any of this
+        pool's devices — the contention term of placement-aware admission
+        and of the arbitration's ``load`` input.  Zero when the pool's
+        device group is exclusively its own."""
+        devs = set(sp.devices())
+        tot = occ = 0
+        for o in self.pools:
+            if o is sp or not devs & set(o.devices()):
+                continue
+            tot += o.slots
+            occ += o.slots - o.free_slots()
+        return occ / tot if tot else 0.0
+
+    def add_pool(self, placement=None, slots: Optional[int] = None) -> int:
+        """Elastic scale-out: append a new slot pool under load, optionally
+        device-placed (``placement``: Mesh | Device | device sequence).
+        Returns the pool's local id — immediately admissible, usable as
+        ``submit(pool=...)``.  Slot PRNG keys derive from the engine seed
+        and the local id exactly as construction-time pools do, so an
+        engine built with N pools and one grown to N pools are
+        key-identical."""
+        lid = self._next_local
+        self._next_local += 1
+        mesh = None if placement is None else self._as_mesh(placement)
+        sp = SlotPool(self.cfg, self.pool_id + lid,
+                      slots or self.slots, self.max_len,
+                      jax.random.fold_in(self._base_key, 0x7F000000 + lid),
+                      draft_cfg=self.draft_cfg, mesh=mesh, lid=lid)
+        self.pools.append(sp)
+        if mesh is not None:
+            self.placements[lid] = mesh
+        return lid
+
+    def drain_pool(self, lid: int) -> None:
+        """Elastic scale-in, live: stop admitting to pool ``lid`` and
+        migrate its in-flight slots out — up to ``cfg.serve.migrate_batch``
+        per tick (bounding the per-tick stall), destination chosen by
+        ``Engine.choose_migration_dst`` — then retire the empty pool.  The
+        draining pool keeps offering candidate ticks until its last slot
+        leaves, so nothing stops streaming; migrated continuations are
+        greedy-bit-identical (``_migrate_slots``) and zero requests drop.
+        Queued requests pinned to the pool fall back to open routing."""
+        sp = self._pool(lid)
+        assert sp is not None, f"no pool {lid}"
+        assert any(o is not sp and not o.draining for o in self.pools), \
+            "drain_pool would leave no admissible pool"
+        sp.draining = True
+        for req in self.queue:
+            if req.pin_pool == lid:
+                req.pin_pool = None
+
+    def _drain_step(self) -> None:
+        """One migration batch per draining pool per tick; pools empty of
+        slots are removed.  A fully-saturated fleet simply defers the
+        migration — the draining pool keeps serving its slots until
+        capacity opens up."""
+        for src in [sp for sp in self.pools if sp.draining]:
+            occ = [(s, r) for s, r in enumerate(src.active)
+                   if r is not None]
+            if occ:
+                opts = [{"pool": o.lid, "free": o.free_slots(),
+                         "busy": self._group_busy(o),
+                         "devices": len(o.devices())}
+                        for o in self.pools
+                        if o is not src and not o.draining
+                        and o.free_slots() > 0]
+                if not opts:
+                    continue
+                dst_lid = self.engine.choose_migration_dst(opts)
+                dst = self._pool(dst_lid)
+                self._last_mig_dst = dst_lid
+                moves = occ[:min(self.cfg.serve.migrate_batch,
+                                 dst.free_slots())]
+                self._migrate_slots(src, dst, moves)
+            if src.free_slots() == src.slots:
+                self.pools.remove(src)
+                self.placements.pop(src.lid, None)
+
+    def _migrate_slots(self, src: SlotPool, dst: SlotPool,
+                       moves: List[tuple]) -> None:
+        """Move in-flight slots ``src -> dst``: one jitted batched gather
+        of the full pool rows (every cache family, n-gram table + context,
+        draft rows) plus positions and PRNG keys on the source placement,
+        a ``device_put`` to the destination placement, and one jitted
+        batched scatter — the seed-write jit, which writes whole rows and
+        so subsumes reset-mask zeroing.  A slot's row + position + key
+        fully determine its continuation (the tick consumes tokens one
+        ``lm.decode_step`` at a time), so greedy outputs are bit-identical
+        across any migration; a never-ticked join travels as its garbage
+        row plus its still-pending reset flag, which the next tick zeroes
+        in-jit as usual.  Measured as a ``serve_migrate`` job (per-token:
+        the consumed positions moved), with the destination's pool-scoped
+        EMA feeding ``choose_migration_dst`` and the arbitration's ``xfer``
+        term."""
+        k = len(moves)
+        free = [s for s in range(dst.slots) if dst.active[s] is None]
+        assert k and len(free) >= k
+        dst_slots = free[:k]
+        src_idx = jnp.asarray([s for s, _ in moves], jnp.int32)
+        dst_idx = jnp.asarray(dst_slots, jnp.int32)
+        gather = build_pool_gather(self.cfg)
+        seed_fn = build_seed_write(self.cfg)
+        ntok = max(int(sum(src.pos_host[s] for s, _ in moves)), 1)
+        ck = ("migrate", src.devices(), dst.devices(), k)
+        cold = ck not in self._compiled
+        self._compiled.add(ck)
+        job = Job("serve_migrate", tokens=ntok, meta={"cold": cold})
+        extras = (Job(pool_kind("serve_migrate", dst.pool_id), tokens=ntok,
+                      meta={"cold": cold}),)
+
+        def thunk():
+            rows, pos, keys = gather(src.pool, src.pos, src.keys, src_idx)
+            rows, pos, keys = dst.put((rows, pos, keys))
+            pool_n, pos_n = seed_fn(dst.pool, dst.pos, dst_idx, rows, pos)
+            keys_n = dst.keys.at[dst_idx].set(keys)
+            return jax.block_until_ready((pool_n, pos_n, keys_n))
+
+        dst.pool, dst.pos, dst.keys = self.engine.run_job(
+            job, thunk, extra=extras)
+        for (s, r), d in zip(moves, dst_slots):
+            dst.active[d] = r
+            dst.pos_host[d] = src.pos_host[s]
+            dst.reset[d] = bool(src.reset[s])
+            r.pool, r.slot = dst.lid, d
+            src.active[s] = None
+            src.reset[s] = False
+            src.pos_host[s] = 0
+        self.migrated_slots += k
+
     # ------------------------------------------------------------- requests
     def submit(self, prompt, max_new: int = 16, temperature: float = 0.0,
                key=None, priority: Optional[str] = None,
@@ -690,7 +982,8 @@ class ServeEngine:
         priority = priority or self._default_class
         assert priority in self.classes, \
             f"unknown priority {priority!r}; classes: {list(self.classes)}"
-        assert pool is None or 0 <= pool < len(self.pools), pool
+        assert pool is None or self._pool(pool) is not None, \
+            f"no pool {pool}; live pools: {[sp.lid for sp in self.pools]}"
         rid = next(self._rid)
         if key is None:
             key = jax.random.fold_in(self._base_key, rid)
@@ -709,7 +1002,7 @@ class ServeEngine:
         return req
 
     def _evict(self, req: Request) -> None:
-        sp = self.pools[req.pool]
+        sp = self._pool(req.pool)
         if self.prefix is not None:
             if self.cfg.serve.snapshot_on_evict:
                 # "commit extends the tree": snapshot the slot's full
@@ -749,9 +1042,14 @@ class ServeEngine:
     def _snapshot_slot(self, sp: SlotPool, slot: int, path) -> None:
         """Capture one slot's pool row (jitted gather, measured as a
         ``serve_snapshot`` job) and commit it into the radix tree under
-        ``path`` — the token prefix the slot has consumed so far."""
-        cold = ("snapshot",) not in self._compiled
-        self._compiled.add(("snapshot",))
+        ``path`` — the token prefix the slot has consumed so far.  The row
+        is normalized to host numpy (``prefix_cache.to_host``) before it
+        enters the tree: snapshots are placement-portable — captured on any
+        pool's mesh, seeding any other pool (the seed-write jit re-commits
+        host rows wherever the destination lives) — and hold no device
+        buffers alive while cached."""
+        cold = ("snapshot", sp.devices()) not in self._compiled
+        self._compiled.add(("snapshot", sp.devices()))
         snap_fn = build_row_snapshot(self.cfg)
         job = Job("serve_snapshot", tokens=len(path), meta={"cold": cold})
         pjob = Job(pool_kind("serve_snapshot", sp.pool_id),
@@ -759,14 +1057,21 @@ class ServeEngine:
         row = self.engine.run_job(
             job, lambda: jax.block_until_ready(snap_fn(sp.pool, slot)),
             extra=(pjob,))
-        self.prefix.insert(path, snapshot=row)
+        self.prefix.insert(path, snapshot=to_host(row))
 
     def _allowed_pools(self, req: Request) -> List[int]:
         if req.pin_pool is not None:
             return [req.pin_pool]
         allowed = self.class_pools.get(req.priority)
-        return list(allowed) if allowed is not None \
-            else list(range(len(self.pools)))
+        if allowed is not None:
+            live = [p for p in allowed
+                    if (sp := self._pool(p)) is not None
+                    and not sp.draining]
+            if live:
+                return live
+            # every routed pool drained away: fall back to open routing
+            # rather than stranding the class
+        return [sp.lid for sp in self.pools if not sp.draining]
 
     def _admit(self) -> None:
         """Join queued requests into free slots.  The cache-row zeroing and
@@ -806,12 +1111,24 @@ class ServeEngine:
                 self._finish_from_cache(req, out)
                 continue
             cands = [p for p in self._allowed_pools(req)
-                     if self.pools[p].free_slots() > 0]
+                     if (c := self._pool(p)) is not None
+                     and not c.draining and c.free_slots() > 0]
             if not cands:
                 remaining.append(req)
                 continue
-            pid = max(cands, key=lambda p: (self.pools[p].free_slots(), -p))
-            sp = self.pools[pid]
+            if self.placements and len(cands) > 1:
+                # placement-aware admission: an engine decision over
+                # occupancy-inflated per-pool per-token EMAs — a fast idle
+                # device group beats a fast contended one
+                pid = self.engine.choose_admission_pool(
+                    [{"pool": p, "free": self._pool(p).free_slots(),
+                      "busy": self._group_busy(self._pool(p)),
+                      "devices": len(self._pool(p).devices())}
+                     for p in cands])
+            else:
+                pid = max(cands,
+                          key=lambda p: (self._pool(p).free_slots(), -p))
+            sp = self._pool(pid)
             slot = next(s for s in range(sp.slots) if sp.active[s] is None)
             req.pool, req.slot = pid, slot
             sp.active[slot] = req
@@ -839,18 +1156,23 @@ class ServeEngine:
             joined.setdefault(pid, []).append((slot, req))
         self.queue = remaining
         for pid, js in joined.items():
-            sp = self.pools[pid]
+            sp = self._pool(pid)
             idx = jnp.asarray([s for s, _ in js], jnp.int32)
-            sp.keys = sp.keys.at[idx].set(jnp.stack(
-                [req.key for _, req in js]))
+            ks = jnp.stack([req.key for _, req in js])
+            if sp.mesh is not None:
+                ks = sp.put(ks)      # keep the scatter on the pool devices
+            sp.keys = sp.keys.at[idx].set(ks)
         for pid, ss in seeds.items():
-            sp = self.pools[pid]
+            sp = self._pool(pid)
             idx = jnp.asarray([s for s, _ in ss], jnp.int32)
+            # snapshots are host numpy (placement-portable): stacked rows
+            # arrive uncommitted, so the seed jit commits them wherever
+            # this pool's donated state lives
             rows = jax.tree.map(lambda *rs: jnp.stack(rs),
                                 *[n.snapshot for _, n in ss])
             new_pos = jnp.asarray([n.pos for _, n in ss], jnp.int32)
-            cold = ("seed", len(ss)) not in self._compiled
-            self._compiled.add(("seed", len(ss)))
+            cold = ("seed", sp.devices(), len(ss)) not in self._compiled
+            self._compiled.add(("seed", sp.devices(), len(ss)))
             seed_fn = build_seed_write(self.cfg)
             depth = sum(n.depth for _, n in ss)
             job = Job("serve_seed", tokens=depth, meta={"cold": cold})
@@ -887,9 +1209,16 @@ class ServeEngine:
                            "max_new": r.max_new, "priority": r.priority,
                            "deferred": r.deferred}
                           for r in self.active],
-                "pools": [{"id": sp.pool_id, "slots": sp.slots,
-                           "free": sp.free_slots()}
+                "pools": [{"id": sp.pool_id, "lid": sp.lid,
+                           "slots": sp.slots, "free": sp.free_slots(),
+                           "draining": sp.draining,
+                           "devices": ([str(d) for d in sp.devices()]
+                                       if sp.mesh is not None else None)}
                           for sp in self.pools],
+                "placement": {"placed_pools": len(self.placements),
+                              "migrated_slots": self.migrated_slots,
+                              "parallel_group_ticks":
+                                  self.parallel_group_ticks},
                 "classes": {n: {"weight": c.weight,
                                 "max_defer": c.max_defer}
                             for n, c in self.classes.items()},
@@ -1000,6 +1329,7 @@ class ServeEngine:
         prefill candidate is ``aged`` as soon as any of its requests has
         sat out its class's ``max_defer`` scheduled ticks."""
         cands = []
+        draining = any(sp.draining for sp in self.pools)
         for sp in self.pools:
             act = [r for r in sp.active if r is not None]
             if not act:
@@ -1008,13 +1338,29 @@ class ServeEngine:
             dec = [r for r in act if not r.prefilling]
             weight = lambda rs: sum(self.classes[r.priority].weight
                                     for r in rs)
+            # placement terms (zero on the legacy unplaced layout, so the
+            # arbitration scores reduce exactly to weighted FRT there):
+            # ``load`` is the pool's device-group contention, ``xfer`` the
+            # migration traffic about to land on it (pending draining
+            # slots x the measured per-move cost, charged to the pool the
+            # drain is currently routing into)
+            load = self._group_busy(sp) if self.placements else 0.0
+            xfer = 0.0
+            if draining and self._last_mig_dst == sp.lid:
+                pend = sum(o.slots - o.free_slots()
+                           for o in self.pools if o.draining)
+                t_mig = self.engine.costs.estimate_first(
+                    [pool_kind("serve_migrate", sp.pool_id),
+                     "serve_migrate"], COST_DEFAULTS["serve_migrate"])
+                batches = -(-pend // max(self.cfg.serve.migrate_batch, 1))
+                xfer = batches * t_mig
             if dec:
                 arms = self._pool_spec_arms(act)
                 cands.append(TickCandidate(
                     sp.pool_id, "decode", n_dec=len(dec), n_pre=len(pre),
                     chunk=self.decode_chunk, weight=weight(dec),
                     spec_len=self.cfg.serve.spec_len if arms else 0,
-                    arms=arms))
+                    arms=arms, load=load, xfer=xfer))
             if pre:
                 overdue = max(r.deferred - self.classes[r.priority].max_defer
                               for r in pre)
@@ -1022,7 +1368,8 @@ class ServeEngine:
                     sp.pool_id, "prefill", n_dec=len(dec), n_pre=len(pre),
                     pre_toks=sum(len(r.prompt) - r.prompt_off for r in pre),
                     chunk=self.prefill_chunk, weight=weight(pre),
-                    aged=overdue >= 0, overdue=max(overdue, 0)))
+                    aged=overdue >= 0, overdue=max(overdue, 0),
+                    load=load, xfer=xfer))
         return cands
 
     def _age_prefills(self, part: List[Request]) -> None:
@@ -1042,43 +1389,15 @@ class ServeEngine:
                     r.deferred += 1
                     r.max_deferred = max(r.max_deferred, r.deferred)
 
-    def tick(self) -> bool:
-        """One engine iteration.  Returns False when stopped, True otherwise
-        (including idle ticks).  Control messages land here — between ticks
-        — and Inspect keeps answering while paused (the controller blocks
-        inside poll until Resume).
-
-        Scheduling: on the single-pool/single-class path the composition is
-        the original ``Engine.choose_serve_tick`` min-FRT decision; with
-        multiple pools or priority classes each pool's candidate ticks go
-        through ``Engine.choose_serve_job`` (weighted FRT + per-class aging
-        bounds) and exactly one pool runs a tick per round."""
-        if self._poll():
-            return False
-        self._admit()
+    def _plan_tick(self, sp: SlotPool, act: List[Request],
+                   mode: str) -> Optional[_TickPlan]:
+        """Build one pool's tick without running it: resolve the
+        speculative arm, tick length, participants, layout (compact vs
+        full) and job records, and close over an **async** dispatch thunk
+        — launching the jit without blocking, so a scheduling round can
+        co-dispatch plans for several device-placed pools (the parallel
+        group-tick path) before waiting on any of them."""
         spec_len = self.cfg.serve.spec_len
-        if self.single_pool:
-            sp = self.pools[0]
-            act = [r for r in sp.active if r is not None]
-            if not act:
-                return True
-            n_pre = sum(r.prefilling for r in act)
-            n_dec = len(act) - n_pre
-            pre_toks = sum(len(r.prompt) - r.prompt_off
-                           for r in act if r.prefilling)
-            arms = self._pool_spec_arms(act)
-            mode = self.engine.choose_serve_tick(
-                n_dec, n_pre, pre_toks, self.decode_chunk,
-                self.prefill_chunk,
-                spec_len=spec_len if arms else 0,
-                pool_id=sp.pool_id, arms=arms)
-        else:
-            cands = self._candidates()
-            if not cands:
-                return True
-            gid, mode = self.engine.choose_serve_job(cands)
-            sp = self.pools[gid - self.pool_id]
-            act = [r for r in sp.active if r is not None]
         if mode == "spec":
             # bare-"spec" back-compat (old monkeypatched deciders): map to
             # the strongest proposer this engine carries
@@ -1116,7 +1435,7 @@ class ServeEngine:
             temps[s] = r.temperature
             part.append(r)
         if not part:
-            return True
+            return None
         # lane-waste mitigation: with >= half the pool sitting out this
         # decode tick, gather participants into a compact batch (padded to
         # a power of two with idle rows so the jit specializes on few batch
@@ -1140,8 +1459,13 @@ class ServeEngine:
         else:
             idx = np.arange(sp.slots, dtype=np.int32)
         rows = len(idx)
-        ckey = (arm if spec else False, L, rows)  # fresh specialization:
-        cold = ckey not in self._compiled         # keep compiles out of EMAs
+        # fresh specialization tracking keeps compiles out of the EMAs; the
+        # device group is part of the key because the shared jit
+        # re-specializes (and re-compiles) per input sharding, so a placed
+        # pool's first tick of a shape is compile-carrying even when an
+        # unplaced pool already ran that shape
+        ckey = (sp.devices(), arm if spec else False, L, rows)
+        cold = ckey not in self._compiled
         self._compiled.add(ckey)
         kind = ("serve_prefill" if mode == "prefill"
                 else spec_kind(arm) if spec else "serve_decode")
@@ -1164,19 +1488,42 @@ class ServeEngine:
                               tokens=ntok, meta={"cold": cold}))
         # build_slot_tick memoizes per (cfg, spec_len, draft_cfg, proposer),
         # so this lookup is a cache hit after the first tick of each arm
-        fn = build_slot_tick(self.cfg, self.cfg.serve.spec_len,
-                             self.draft_cfg, arm) if spec else self._tick
-        dargs = (self.draft_params,) if self.draft_cfg is not None else ()
+        fn = build_slot_tick(self.cfg, spec_len, self.draft_cfg, arm) \
+            if spec else self._tick
+        params, dparams = self._params_for(sp)
+        dargs = (dparams,) if self.draft_cfg is not None else ()
         if compact:
             jidx = jnp.asarray(idx)
-            pool_c = jax.tree.map(lambda c: c[jidx], sp.pool)
-            pool_n, pos_n, keys_n, emitted, nvalid = self.engine.run_job(
-                job, lambda: jax.block_until_ready(fn(
-                    self.params, *dargs, pool_c, sp.pos[jidx],
-                    jnp.asarray(toks[idx]), jnp.asarray(n_given[idx]),
-                    jnp.asarray(active[idx]), jnp.asarray(sp.reset[idx]),
-                    sp.keys[jidx], jnp.asarray(temps[idx]))),
-                extra=tuple(extras))
+
+            def dispatch():
+                pool_c = jax.tree.map(lambda c: c[jidx], sp.pool)
+                return fn(params, *dargs, pool_c, sp.pos[jidx],
+                          jnp.asarray(toks[idx]), jnp.asarray(n_given[idx]),
+                          jnp.asarray(active[idx]),
+                          jnp.asarray(sp.reset[idx]), sp.keys[jidx],
+                          jnp.asarray(temps[idx]))
+        else:
+            def dispatch():
+                return fn(params, *dargs, sp.pool, sp.pos,
+                          jnp.asarray(toks), jnp.asarray(n_given),
+                          jnp.asarray(active), jnp.asarray(sp.reset),
+                          sp.keys, jnp.asarray(temps))
+        return _TickPlan(sp=sp, mode=mode, spec=spec, arm=arm, L=L,
+                         part=part, part_slots=part_slots, n_given=n_given,
+                         idx=idx, compact=compact, compact_ok=compact_ok,
+                         job=job, extras=tuple(extras), dispatch=dispatch)
+
+    def _commit_tick(self, plan: _TickPlan, outs) -> int:
+        """Write one dispatched tick's results back: device state
+        (pool/pos/keys), the host position view, token commits, evictions,
+        prefill snapshots and speculative counters.  Returns the number of
+        new tokens emitted; the caller aggregates aging, breakpoint and
+        tick-count bookkeeping once per scheduling round."""
+        sp, L, spec, part = plan.sp, plan.L, plan.spec, plan.part
+        n_given, idx = plan.n_given, plan.idx
+        if plan.compact:
+            pool_n, pos_n, keys_n, emitted, nvalid = outs
+            jidx = jnp.asarray(idx)
             sp.pool = jax.tree.map(lambda p, n: p.at[jidx].set(n),
                                    sp.pool, pool_n)
             sp.pos = sp.pos.at[jidx].set(pos_n)
@@ -1189,14 +1536,7 @@ class ServeEngine:
             nv[idx] = np.asarray(nvalid)
             self.compact_ticks += 1
         else:
-            sp.pool, sp.pos, sp.keys, emitted, nvalid = \
-                self.engine.run_job(
-                    job, lambda: jax.block_until_ready(fn(
-                        self.params, *dargs, sp.pool, sp.pos,
-                        jnp.asarray(toks), jnp.asarray(n_given),
-                        jnp.asarray(active), jnp.asarray(sp.reset),
-                        sp.keys, jnp.asarray(temps))),
-                    extra=tuple(extras))
+            sp.pool, sp.pos, sp.keys, emitted, nvalid = outs
             sp.reset[:] = False           # zeroing landed inside the jit
             em = np.asarray(emitted)
             nv = np.asarray(nvalid).astype(np.int64)
@@ -1213,16 +1553,16 @@ class ServeEngine:
                     continue                  # prompt continues next tick
             need = r.max_new - len(r.tokens)
             last = int(nv[s]) if spec else L
-            outs = em[s, g - 1:last][:need]
-            if outs.size and r.t_first is None:
+            outs_r = em[s, g - 1:last][:need]
+            if outs_r.size and r.t_first is None:
                 r.t_first = now               # first-token latency mark
-            r.tokens.extend(int(t) for t in outs)
-            n_new += len(outs)
+            r.tokens.extend(int(t) for t in outs_r)
+            n_new += len(outs_r)
             if len(r.tokens) >= r.max_new:
                 self._evict(r)
             else:
                 r.pending_tok = int(em[s, last - 1])
-        if self.prefix is not None and mode == "prefill":
+        if self.prefix is not None and plan.mode == "prefill":
             # snapshot capture: a prefill tick boundary where the slot has
             # consumed exactly a prompt prefix (no decode output fed back
             # yet) is a reusable state — commit it into the radix tree
@@ -1240,18 +1580,123 @@ class ServeEngine:
                 self._snapshot_slot(sp, r.slot, path)
         if spec:
             proposed = (L - 1) * len(part)
-            accepted = int(sum(int(nv[s]) - 1 for s in part_slots))
+            accepted = int(sum(int(nv[s]) - 1 for s in plan.part_slots))
             self.spec_ticks += 1
             self.spec_proposed += proposed
             self.spec_accepted += accepted
             st = self.spec_arms.setdefault(
-                arm, {"ticks": 0, "proposed": 0, "accepted": 0})
+                plan.arm, {"ticks": 0, "proposed": 0, "accepted": 0})
             st["ticks"] += 1
             st["proposed"] += proposed
             st["accepted"] += accepted
             if proposed:
                 self.engine.observe_accept(sp.pool_id,
-                                           accepted / proposed, arm=arm)
+                                           accepted / proposed,
+                                           arm=plan.arm)
+        return n_new
+
+    def _group_plans(self, winner: _TickPlan) -> List[_TickPlan]:
+        """Opportunistic co-ticks for the parallel group-tick path: plain
+        (non-speculative) plans for OTHER placed pools whose device groups
+        are disjoint from the winner's (and each other's) — prefill when
+        the pool still consumes prompt, decode otherwise (a prefill tick
+        carries the pool's decoding slots along, so either way every slot
+        with work advances).  The arbitration winner is unchanged —
+        co-ticks only add work that would otherwise idle those devices;
+        they run no speculative arm and record no extra decisions.  Empty
+        without placements or when ``cfg.serve.parallel_ticks`` is off."""
+        if not self.cfg.serve.parallel_ticks or winner.sp.mesh is None:
+            return []
+        used = set(winner.sp.devices())
+        out = []
+        for sp in self.pools:
+            if sp is winner.sp or sp.mesh is None:
+                continue
+            devs = set(sp.devices())
+            if devs & used:
+                continue
+            act = [r for r in sp.active if r is not None]
+            if not act:
+                continue
+            mode = "prefill" if any(r.prefilling for r in act) else "decode"
+            p = self._plan_tick(sp, act, mode)
+            if p is None:
+                continue
+            used |= devs
+            out.append(p)
+        return out
+
+    def tick(self) -> bool:
+        """One engine iteration.  Returns False when stopped, True otherwise
+        (including idle ticks).  Control messages land here — between ticks
+        — and Inspect keeps answering while paused (the controller blocks
+        inside poll until Resume).
+
+        Scheduling: on the single-pool/single-class path the composition is
+        the original ``Engine.choose_serve_tick`` min-FRT decision; with
+        multiple pools or priority classes each pool's candidate ticks go
+        through ``Engine.choose_serve_job`` (weighted FRT, placement-
+        adjusted, + per-class aging bounds) and one pool wins the round —
+        then, with device-placed pools, plain decode ticks for the other
+        placed pools co-dispatch alongside the winner (``_group_plans``)
+        so disjoint device groups decode concurrently."""
+        if self._poll():
+            return False
+        self._drain_step()
+        self._admit()
+        spec_len = self.cfg.serve.spec_len
+        if self.single_pool:
+            sp = self.pools[0]
+            act = [r for r in sp.active if r is not None]
+            if not act:
+                return True
+            n_pre = sum(r.prefilling for r in act)
+            n_dec = len(act) - n_pre
+            pre_toks = sum(len(r.prompt) - r.prompt_off
+                           for r in act if r.prefilling)
+            arms = self._pool_spec_arms(act)
+            mode = self.engine.choose_serve_tick(
+                n_dec, n_pre, pre_toks, self.decode_chunk,
+                self.prefill_chunk,
+                spec_len=spec_len if arms else 0,
+                pool_id=sp.pool_id, arms=arms)
+        else:
+            cands = self._candidates()
+            if not cands:
+                return True
+            gid, mode = self.engine.choose_serve_job(cands)
+            sp = self._pool(gid - self.pool_id)
+            act = [r for r in sp.active if r is not None]
+        plan = self._plan_tick(sp, act, mode)
+        if plan is None:
+            return True
+        group = self._group_plans(plan)
+        if not group:
+            outs = self.engine.run_job(
+                plan.job, lambda: jax.block_until_ready(plan.dispatch()),
+                extra=plan.extras)
+            part = list(plan.part)
+            n_new = self._commit_tick(plan, outs)
+        else:
+            # parallel group tick: launch every plan's jit before blocking
+            # on any (async PJRT dispatch overlaps them on the disjoint
+            # device groups), then block in dispatch order.  Each pool's
+            # measured time is its elapsed-from-round-start — the
+            # overlapped reality its EMAs should price — with cold flags
+            # respected exactly as run_job would.
+            plans = [plan] + group
+            t0 = time.perf_counter()
+            live = [(p, p.dispatch()) for p in plans]
+            part, n_new = [], 0
+            for p, outs in live:
+                jax.block_until_ready(outs)
+                dt = time.perf_counter() - t0
+                self.engine.observe(p.job, dt)
+                for j in p.extras:
+                    self.engine.observe(j, dt)
+                n_new += self._commit_tick(p, outs)
+                part.extend(p.part)
+            self.parallel_group_ticks += len(group)
         self._age_prefills(part)
         self.tokens_out += n_new
         self._check_breakpoints(n_new)

@@ -65,7 +65,8 @@ class BatchedServer:
                  decode_chunk: int = 4, spec_decode: bool = False,
                  pools: int = 1, class_pools: Optional[Dict] = None,
                  prefix_cache: bool = False, draft: Optional[str] = None,
-                 draft_cfg: Optional[ArchConfig] = None, draft_params=None):
+                 draft_cfg: Optional[ArchConfig] = None, draft_params=None,
+                 placements: Optional[Dict] = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -84,6 +85,10 @@ class BatchedServer:
         self.draft = draft
         self.draft_cfg = draft_cfg
         self.draft_params = draft_params
+        # pool id -> device list / Mesh: device-placed slot pools (params
+        # replicated or TP-sharded per pool, caches resident on the pool's
+        # devices; see ServeEngine placements)
+        self.placements = placements
         self._step = None                # static-path jit, built on demand
         self._engine = None
 
@@ -97,7 +102,8 @@ class BatchedServer:
                 spec_decode=self.spec_decode, pools=self.pools,
                 class_pools=self.class_pools,
                 prefix_cache=self.prefix_cache, draft=self.draft,
-                draft_cfg=self.draft_cfg, draft_params=self.draft_params)
+                draft_cfg=self.draft_cfg, draft_params=self.draft_params,
+                placements=self.placements)
         return self._engine
 
     def submit(self, prompt, max_new: int = 16, temperature: float = 0.0,

@@ -140,6 +140,49 @@ def cache_specs(cfg: ArchConfig, mesh: Mesh, shape: ShapeCfg, cache_tree,
     return {"caches": caches, "pos": P()}
 
 
+def pool_mesh(devices, tp: int = 1) -> Mesh:
+    """A ("data", "model") mesh over an explicit device group — the unit a
+    serve slot pool is *placed* on (``ServeEngine(placements=...)``).
+
+    ``tp`` is the tensor-parallel degree within the pool: the trailing
+    ``model`` axis gets ``tp`` devices and the leading ``data`` axis the
+    rest, so ``param_specs``/``pool_specs`` rules apply unchanged.  The
+    default ``tp=1`` keeps every matmul's reduction on one device, which is
+    what preserves the serve engine's greedy bit-identicality guarantee
+    across placements (a split reduction reorders float adds)."""
+    devs = list(devices)
+    assert devs, "pool_mesh needs at least one device"
+    assert len(devs) % max(tp, 1) == 0, \
+        f"{len(devs)} devices not divisible by tp={tp}"
+    arr = np.asarray(devs, dtype=object).reshape(len(devs) // tp, tp)
+    return Mesh(arr, ("data", "model"))
+
+
+def pool_specs(mesh: Mesh, pool_tree):
+    """Spec tree for a SlotPool's donated device state (cache rows, n-gram
+    tables, positions, PRNG keys): every leaf is ``[slots, ...]``, so the
+    slot dim shards over ``data`` when divisible (per-slot compute is
+    independent — a slot-dim split never touches a reduction, so outputs
+    stay bit-identical) and trailing dims of deep leaves shard over
+    ``model`` when a dim divides (inert at the default tp=1).  Non-divisible
+    leaves fall back to replication, the same per-leaf discipline as
+    ``param_specs``."""
+    da = data_axes(mesh)
+    dp = axis_size(mesh, da)
+
+    def leaf(x):
+        nd = x.ndim
+        lead = da if (da and x.shape[0] % dp == 0) else None
+        tail = [None] * (nd - 1)
+        if nd >= 3 and axis_size(mesh, "model") > 1:
+            i = _model_dim_part(mesh, *x.shape[2:])
+            if i is not None:
+                tail[1 + i] = "model"
+        return P(lead, *tail)
+
+    return jax.tree.map(leaf, pool_tree)
+
+
 def opt_state_specs(param_spec_tree):
     from repro.optim.adamw import OptState
     return OptState(param_spec_tree, param_spec_tree, P())

@@ -2,8 +2,11 @@ import os
 import sys
 
 # smoke tests and benches must see exactly 1 device; ONLY dryrun.py sets the
-# 512-device flag.
-os.environ.pop("XLA_FLAGS", None)
+# 512-device flag.  Exception: the CI multidevice job sets REPRO_MULTIDEVICE
+# together with --xla_force_host_platform_device_count so the device-placed
+# pool tests exercise real disjoint device groups.
+if not os.environ.get("REPRO_MULTIDEVICE"):
+    os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 

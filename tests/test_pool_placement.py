@@ -1,0 +1,344 @@
+"""Device-placed slot pools: placement scheduling units, elastic
+add/drain under load, and live slot migration across meshes.
+
+The invariant everywhere is the serving layer's one contract: placement
+and migration may only ever RELOCATE work — greedy outputs must stay
+bit-identical to the static ``BatchedServer.generate_static`` oracle
+whatever the pool meshes, however many times a slot moved mid-stream.
+A slot's pool row + position + PRNG key fully determine its continuation,
+so a migrated request's remaining tokens must match an unmigrated run's
+exactly, across every cache family the repo carries (KV attention /
+recurrent / SSM-hybrid), with draft rows and n-gram tables riding along.
+
+Runs on ONE device (conftest strips XLA_FLAGS): placements degrade to
+same-device meshes, which still exercise the placed code paths —
+committed params/caches, per-placement jit specializations, the
+gather/put/scatter migration transfer.  The CI multidevice job re-runs
+this file under ``--xla_force_host_platform_device_count=8`` (with
+``REPRO_MULTIDEVICE=1``) so disjoint device groups and the parallel
+group-tick path run for real.
+"""
+from functools import lru_cache
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_arch
+from repro.engine import Engine, ServeEngine
+from repro.models import lm
+from repro.runtime.serve import BatchedServer
+from repro.runtime.sharding import axis_size, pool_mesh, pool_specs
+
+MAX_LEN = 64
+# the three cache families a pool row can carry: KV attention rows
+# (gemma3), pure recurrent state (rwkv6), SSM+attention hybrid (zamba2)
+FAMS = ["gemma3-1b", "rwkv6-1.6b", "zamba2-7b"]
+
+
+@lru_cache(maxsize=None)
+def _fixture(arch="gemma3-1b"):
+    cfg = get_arch(arch + "-smoke")
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params, BatchedServer(cfg, params, max_len=MAX_LEN)
+
+
+_ORACLE = {}
+
+
+def oracle(arch, prompt, max_new):
+    key = (arch, tuple(int(t) for t in prompt), int(max_new))
+    if key not in _ORACLE:
+        _, _, srv = _fixture(arch)
+        _ORACLE[key] = srv.generate_static(
+            np.asarray(prompt, np.int32)[None], max_new=int(max_new))[0]
+    return _ORACLE[key]
+
+
+def _halves():
+    """Two pool placements: disjoint halves on a multi-device host,
+    same-device meshes on one."""
+    devs = jax.devices()
+    half = max(len(devs) // 2, 1)
+    return {0: devs[:half], 1: devs[half:] or devs}
+
+
+def _prompts(n, seed=0, vocab=100):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, size=int(rng.integers(4, 14))).tolist()
+            for _ in range(n)]
+
+
+def _run(eng, reqs, drain_at=None, add_at=None, add_kw=None, max_ticks=600):
+    """Drive to completion with optional mid-stream drain/join events."""
+    for t in range(max_ticks):
+        if t == drain_at and len(eng.pools) > 1:
+            eng.drain_pool(eng.pools[0].lid)
+        if t == add_at:
+            eng.add_pool(**(add_kw or {}))
+        if not eng.tick():
+            break
+        if all(len(r.tokens) >= r.max_new for r in reqs):
+            return
+    assert all(len(r.tokens) >= r.max_new for r in reqs), \
+        "requests did not finish"
+
+
+def _assert_oracle(arch, prompts, max_new, reqs):
+    for i, (p, r) in enumerate(zip(prompts, reqs)):
+        np.testing.assert_array_equal(
+            r.output(), oracle(arch, p, max_new),
+            err_msg=f"req {i} plen={len(p)}")
+
+
+# ----------------------------------------------------------- sharding units
+
+def test_pool_mesh_axes():
+    devs = jax.devices()
+    m = pool_mesh(devs[:1])
+    assert tuple(m.axis_names) == ("data", "model")
+    assert axis_size(m, "data") == 1 and axis_size(m, "model") == 1
+    if len(devs) >= 2:
+        m2 = pool_mesh(devs[:2])
+        assert axis_size(m2, "data") == 2
+        m2t = pool_mesh(devs[:2], tp=2)
+        assert axis_size(m2t, "model") == 2
+
+
+def test_pool_specs_slot_dim_divisibility():
+    """Slot-dim sharding only when the leading dim divides the data axis;
+    otherwise the leaf replicates (placement must accept ANY slot count)."""
+    def slot_sharded(spec):
+        return spec[0] is not None and "data" in tuple(jax.tree.leaves(
+            (spec[0],)))
+
+    m = pool_mesh(jax.devices()[:1])
+    tree = {"a": np.zeros((4, 3)), "b": np.zeros((3, 2))}
+    specs = pool_specs(m, tree)
+    assert slot_sharded(specs["a"]) and slot_sharded(specs["b"])
+    if len(jax.devices()) >= 2:
+        m2 = pool_mesh(jax.devices()[:2])
+        specs2 = pool_specs(m2, tree)
+        assert slot_sharded(specs2["a"])
+        # 3 slots don't divide 2 devices -> replicated
+        assert specs2["b"][0] is None
+
+
+# --------------------------------------------------------- scheduling units
+
+def test_placement_adjusted_frt_reduces_to_weighted():
+    from repro.core.scheduler import placement_adjusted_frt
+    assert placement_adjusted_frt(2.0, 4.0) == \
+        placement_adjusted_frt(2.0, 4.0, load=0.0, xfer=0.0) == 0.5
+    assert placement_adjusted_frt(2.0, 1.0, load=1.0) == 4.0
+    assert placement_adjusted_frt(2.0, 1.0, xfer=3.0) == 5.0
+
+
+def test_choose_admission_pool_prefers_idle_device_group():
+    eng = Engine()
+    got = eng.choose_admission_pool([
+        {"pool": 0, "free": 1, "busy": 0.9, "devices": 1},
+        {"pool": 1, "free": 1, "busy": 0.0, "devices": 1}])
+    assert got == 1
+    assert eng.decisions[-1]["decision"] == "admission_pool"
+
+
+def test_choose_migration_dst_prefers_free_capacity():
+    eng = Engine()
+    got = eng.choose_migration_dst([
+        {"pool": 1, "free": 1, "busy": 0.0, "devices": 1},
+        {"pool": 2, "free": 4, "busy": 0.0, "devices": 1}])
+    assert got == 2
+    assert eng.decisions[-1]["decision"] == "migration_dst"
+
+
+# -------------------------------------------- placed serving bit-identity
+
+def test_placed_pools_match_oracle_and_unplaced():
+    arch = "gemma3-1b"
+    cfg, params, _ = _fixture(arch)
+    prompts = _prompts(4, seed=1)
+    placed = ServeEngine(cfg, params, max_len=MAX_LEN, slots=2, pools=2,
+                         prefill_chunk=4, decode_chunk=2,
+                         placements=_halves())
+    plain = ServeEngine(cfg, params, max_len=MAX_LEN, slots=2, pools=2,
+                        prefill_chunk=4, decode_chunk=2)
+    rp = [placed.submit(p, max_new=10) for p in prompts]
+    ru = [plain.submit(p, max_new=10) for p in prompts]
+    _run(placed, rp)
+    _run(plain, ru)
+    _assert_oracle(arch, prompts, 10, rp)
+    for a, b in zip(rp, ru):
+        np.testing.assert_array_equal(a.output(), b.output())
+    ins = placed._inspect("status")["placement"]
+    assert ins["placed_pools"] == 2
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_migration_roundtrip_bit_identical(arch):
+    """Mid-stream migration per cache family: pin 2 requests to pool 0,
+    let them emit a few tokens, drain pool 0 into pool 1's free slots,
+    and require the continuations to match the never-migrated oracle."""
+    cfg, params, _ = _fixture(arch)
+    prompts = _prompts(2, seed=2, vocab=min(cfg.vocab, 100))
+    eng = ServeEngine(cfg, params, max_len=MAX_LEN, slots=4, pools=2,
+                      prefill_chunk=4, decode_chunk=2,
+                      placements=_halves())
+    reqs = [eng.submit(p, max_new=12, pool=0) for p in prompts]
+    # run into decode (some tokens out) before draining: a true mid-stream
+    # move, prompt consumed + generated tokens in the cache rows
+    t = 0
+    while not any(r.tokens for r in reqs):
+        assert eng.tick() and t < 200
+        t += 1
+    eng.drain_pool(0)
+    _run(eng, reqs)
+    assert eng.migrated_slots >= 1, "drain finished without migrating"
+    assert [sp.lid for sp in eng.pools] == [1]
+    _assert_oracle(arch, prompts, 12, reqs)
+
+
+@pytest.mark.parametrize("extra", [{"draft": "self"}, {"spec_decode": True}])
+def test_migration_carries_proposer_state(extra):
+    """Draft-model rows and n-gram tables live inside the pool pytree, so
+    they migrate with the slot; speculative outputs must stay exact."""
+    arch = "gemma3-1b"
+    cfg, params, _ = _fixture(arch)
+    prompts = _prompts(2, seed=3)
+    eng = ServeEngine(cfg, params, max_len=MAX_LEN, slots=4, pools=2,
+                      prefill_chunk=4, decode_chunk=2,
+                      placements=_halves(), **extra)
+    reqs = [eng.submit(p, max_new=12, pool=0) for p in prompts]
+    t = 0
+    while not any(r.tokens for r in reqs):
+        assert eng.tick() and t < 200
+        t += 1
+    eng.drain_pool(0)
+    _run(eng, reqs)
+    assert eng.migrated_slots >= 1
+    _assert_oracle(arch, prompts, 12, reqs)
+
+
+def test_drain_under_load_zero_dropped():
+    """Saturated fleet + queue backlog, drain mid-run: every request —
+    in-flight, queued, pinned or not — completes with oracle-exact
+    output; nothing is dropped and nothing re-runs from scratch into a
+    different answer."""
+    arch = "gemma3-1b"
+    cfg, params, _ = _fixture(arch)
+    prompts = _prompts(7, seed=4)
+    eng = ServeEngine(cfg, params, max_len=MAX_LEN, slots=2, pools=2,
+                      prefill_chunk=4, decode_chunk=2,
+                      placements=_halves())
+    reqs = [eng.submit(p, max_new=8) for p in prompts]
+    _run(eng, reqs, drain_at=3)
+    assert len(eng.pools) == 1
+    assert not eng.queue
+    _assert_oracle(arch, prompts, 8, reqs)
+
+
+def test_join_while_saturated():
+    """Elastic scale-out under backlog: a pool added mid-run absorbs
+    queued work (its slots actually serve) without disturbing a single
+    in-flight output."""
+    arch = "gemma3-1b"
+    cfg, params, _ = _fixture(arch)
+    prompts = _prompts(6, seed=5)
+    devs = jax.devices()
+    half = max(len(devs) // 2, 1)
+    eng = ServeEngine(cfg, params, max_len=MAX_LEN, slots=2, pools=1,
+                      prefill_chunk=4, decode_chunk=2,
+                      placements={0: devs[:half]})
+    reqs = [eng.submit(p, max_new=8) for p in prompts]
+    served_pools = set()
+    for t in range(600):
+        if t == 2:
+            lid = eng.add_pool(placement=devs[half:] or devs, slots=2)
+            assert lid == 1
+        assert eng.tick()
+        served_pools.update(r.pool for r in reqs if r.pool >= 0)
+        if all(len(r.tokens) >= r.max_new for r in reqs):
+            break
+    assert all(len(r.tokens) >= r.max_new for r in reqs)
+    assert len(eng.pools) == 2
+    assert eng.pools[1].lid == 1 and eng.pools[1].mesh is not None
+    assert 1 in served_pools, "joined pool never served a request"
+    _assert_oracle(arch, prompts, 8, reqs)
+
+
+def test_drain_rejects_last_pool():
+    cfg, params, _ = _fixture()
+    eng = ServeEngine(cfg, params, max_len=MAX_LEN, slots=2, pools=1,
+                      prefill_chunk=4, decode_chunk=2)
+    with pytest.raises(AssertionError):
+        eng.drain_pool(0)
+
+
+def test_prefix_snapshots_are_host_numpy():
+    """Satellite invariant: every prefix-cache snapshot leaf is host
+    numpy — placement-portable (seeds any pool's mesh) and it survives
+    the capturing pool being drained away."""
+    cfg, params, _ = _fixture()
+    prompts = [[7] * 8 + [i + 1] for i in range(3)]
+    eng = ServeEngine(cfg, params, max_len=MAX_LEN, slots=2, pools=2,
+                      prefill_chunk=4, decode_chunk=2, prefix_cache=True,
+                      placements=_halves())
+    reqs = [eng.submit(p, max_new=6) for p in prompts]
+    _run(eng, reqs)
+    snaps = []
+
+    def walk(node):
+        if node.snapshot is not None:
+            snaps.append(node.snapshot)
+        for c in node.children.values():
+            walk(c)
+
+    walk(eng.prefix.root)
+    assert snaps, "no snapshots captured"
+    for s in snaps:
+        for leaf in jax.tree.leaves(s):
+            assert isinstance(leaf, np.ndarray), type(leaf)
+    _assert_oracle("gemma3-1b", prompts, 6, reqs)
+
+
+def test_migration_xfer_term_reaches_candidates():
+    """While a drain is pending toward a pool, that pool's tick
+    candidates must carry a positive transfer-cost term (the xfer input
+    of placement_adjusted_frt)."""
+    cfg, params, _ = _fixture()
+    prompts = _prompts(4, seed=6)
+    eng = ServeEngine(cfg, params, max_len=MAX_LEN, slots=2, pools=2,
+                      prefill_chunk=4, decode_chunk=2,
+                      placements=_halves())
+    reqs = [eng.submit(p, max_new=16) for p in prompts]
+    # a couple of ticks to get slots occupied in both pools
+    for _ in range(3):
+        assert eng.tick()
+    eng.drain_pool(0)
+    # a migration batch has already landed on pool 1 and more slots are
+    # still pending in the draining pool — pool 1's candidates must be
+    # priced with the positive transfer term
+    eng._last_mig_dst = 1
+    cands = eng._candidates()
+    by_pool = {c.pool_id - eng.pool_id: c for c in cands}
+    assert 1 in by_pool and by_pool[1].xfer > 0
+    # other pools carry no transfer term
+    assert all(c.xfer == 0 for lid, c in by_pool.items() if lid != 1)
+    _run(eng, reqs)
+    _assert_oracle("gemma3-1b", prompts, 16, reqs)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 devices (CI multidevice job)")
+def test_parallel_group_ticks_on_disjoint_devices():
+    """With pools on disjoint device groups, scheduling rounds co-dispatch
+    decode ticks for the non-winning placed pools."""
+    cfg, params, _ = _fixture()
+    prompts = _prompts(4, seed=7)
+    eng = ServeEngine(cfg, params, max_len=MAX_LEN, slots=2, pools=2,
+                      prefill_chunk=4, decode_chunk=2,
+                      placements=_halves())
+    reqs = [eng.submit(p, max_new=10) for p in prompts]
+    _run(eng, reqs)
+    assert eng.parallel_group_ticks > 0
+    _assert_oracle("gemma3-1b", prompts, 10, reqs)

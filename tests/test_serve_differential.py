@@ -7,8 +7,10 @@ join/evict pressure (more requests than slots), control-message
 interleavings delivered between ticks, and hot config updates — and asserts
 that ``ServeEngine`` greedy outputs are **bit-identical** to the static
 ``BatchedServer.generate_static`` oracle across ``compact_decode`` ×
-``spec_decode`` × ``proposer/draft`` × ``prefix_cache`` × ``pools``
-(scenarios mix a shared
+``spec_decode`` × ``proposer/draft`` × ``prefix_cache`` × ``pools`` ×
+``placements``/mid-stream ``drain_pool`` (device-placed pools + live slot
+migration; same-device meshes on a 1-device host, disjoint halves under the
+CI multidevice job) (scenarios mix a shared
 prompt preamble in so the prefix-cache axis exercises seeded admissions
 and result-cache hits, not just the miss path; multi-pool runs take the weighted-FRT
 ``choose_serve_job`` arbitration; the priority-class-specific paths are
@@ -134,6 +136,15 @@ def gen_scenario(rng):
         # weighted multi-pool arbitration.  Pool slot counts stay inside
         # SLOTS, so no new tick-jit specializations enter the sweep.
         "pools": int(rng.integers(1, 3)),
+        # device-placed pools: params/caches committed to per-pool meshes
+        # (disjoint halves on a multi-device host, same-device meshes on
+        # one) — the placement-adjusted arbitration and the parallel
+        # group-tick path must stay bit-identical
+        "placements": bool(rng.integers(2)),
+        # mid-stream elastic scale-in: drain pool 0 at this tick (ignored
+        # on single-pool scenarios) — live slot migration under whatever
+        # spec/draft/prefix axes the scenario drew
+        "drain_at": int(rng.integers(0, 7)) if rng.integers(2) else None,
         # 0..2 control batches at distinct tick indices
         "schedule": {int(t): str(rng.choice(CTL_KINDS))
                      for t in rng.choice(7, size=int(rng.integers(0, 3)),
@@ -152,6 +163,18 @@ def _draft_kwargs(sc, params):
     return {}
 
 
+def _placements(sc):
+    """Per-pool meshes for placed scenarios: disjoint device halves when
+    the host has several devices, same-device meshes on one — either way
+    the placed code paths (committed params/caches, sharded tick jits,
+    migration transfers) run."""
+    if not sc.get("placements") or sc.get("pools", 1) < 2:
+        return None
+    devs = jax.devices()
+    half = max(len(devs) // 2, 1)
+    return {0: devs[:half], 1: devs[half:] or devs}
+
+
 def run_scenario(sc):
     params, _ = _fixture()
     eng = ServeEngine(CFG, params, max_len=MAX_LEN, slots=sc["slots"],
@@ -160,14 +183,21 @@ def run_scenario(sc):
                       compact_decode=sc["compact"],
                       spec_decode=sc["spec"], pools=sc.get("pools", 1),
                       prefix_cache=sc.get("prefix_cache", False),
+                      placements=_placements(sc),
                       **_draft_kwargs(sc, params))
     reqs = [eng.submit(p, max_new=n)
             for p, n in zip(sc["prompts"], sc["max_news"])]
     ctl_rng = np.random.default_rng(sc["ctl_seed"])
+    drain_at = sc.get("drain_at")
     ticks = 0
     while eng.queue or any(r is not None for r in eng.active):
         if ticks in sc["schedule"]:
             _ctl_batch(eng, sc["schedule"][ticks], ctl_rng)
+        if ticks == drain_at and len(eng.pools) > 1:
+            # elastic scale-in mid-stream: every in-flight slot of pool 0
+            # migrates (or finishes in place under saturation) and the
+            # outputs below must still match the oracle bit for bit
+            eng.drain_pool(eng.pools[0].lid)
         assert eng.tick(), "engine stopped unexpectedly"
         ticks += 1
         assert ticks < 1000, "serve engine did not drain"
@@ -181,6 +211,8 @@ def run_scenario(sc):
                      f" draft={sc.get('draft')}"
                      f" pools={sc.get('pools', 1)}"
                      f" prefix_cache={sc.get('prefix_cache', False)}"
+                     f" placements={sc.get('placements', False)}"
+                     f" drain_at={sc.get('drain_at')}"
                      f" schedule={sc['schedule']}"))
     return eng
 
@@ -312,6 +344,9 @@ if HAVE_HYPOTHESIS:
             "draft": data.draw(st.sampled_from(DRAFTS), label="draft"),
             "prefix_cache": data.draw(st.booleans(), label="prefix_cache"),
             "pools": data.draw(st.integers(1, 2), label="pools"),
+            "placements": data.draw(st.booleans(), label="placements"),
+            "drain_at": data.draw(st.one_of(st.none(), st.integers(0, 6)),
+                                  label="drain_at"),
             "schedule": data.draw(
                 st.dictionaries(st.integers(0, 6),
                                 st.sampled_from(CTL_KINDS), max_size=2),
