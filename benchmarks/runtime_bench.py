@@ -839,6 +839,93 @@ def bench_pool_placement():
     return rows
 
 
+def bench_weight_publish(tmp="/tmp/repro_bench_pub"):
+    """Async checkpointing + live weight publishing (ROADMAP item 3).
+
+    (a) Save stall: the wall time ``TrainLoop.save`` holds up the training
+    thread, blocking baseline (snapshot + inline persist) vs the two-region
+    async path (snapshot only; persist overlapped on the worker).  The
+    async stall must not exceed the blocking one — the persist region has
+    left the critical path.  (b) Serve-side publish: p99 tick wall of a
+    request stream that hot-swaps weights mid-stream every few ticks
+    (value-identical params + version bump: the full invalidation work —
+    prefix flush, placed-params re-commit, result-cache re-key — without
+    changing outputs) vs the same stream without publishes, with zero
+    dropped requests."""
+    import shutil
+    from repro.engine.serve import ServeEngine
+    from repro.models import lm as lm_lib
+
+    shutil.rmtree(tmp, ignore_errors=True)
+    rows = []
+    # --- (a) checkpoint save stall, blocking vs async ---------------------
+    stalls = {}
+    for mode in ("blocking", "async"):
+        # ckpt_every is huge so the loop never auto-saves: the bench drives
+        # save() by hand to time the stall in isolation
+        loop = _loop(ckpt_every=10**9, tmp=f"{tmp}/{mode}")
+        loop.lc.ckpt_async = mode == "async"
+        loop.run(1)                               # warm the step jits
+        ts = []
+        for i in range(8):
+            t0 = time.perf_counter()
+            loop.save(i + 1)
+            ts.append(time.perf_counter() - t0)
+            loop.run(1)                           # the overlapped next step
+        loop.ckpt.wait()
+        stalls[mode] = float(np.median(ts))
+        rows.append((f"weight_publish/save_stall_{mode}",
+                     stalls[mode] * 1e6,
+                     f"median_ms={stalls[mode] * 1e3:.2f};saves={len(ts)}"))
+    ratio = stalls["blocking"] / max(stalls["async"], 1e-9)
+    overlap = 1.0 - stalls["async"] / max(stalls["blocking"], 1e-12)
+    rows.append(("weight_publish/save_speedup", 0.0,
+                 f"stall_block_over_async={ratio:.2f}x;"
+                 f"overlap={overlap:.2f}"))
+    assert ratio >= 1.0, \
+        f"async save stalled longer than blocking: {ratio:.2f}x"
+
+    # --- (b) serve-side publish stall + zero drops ------------------------
+    cfg = get_arch("gemma3-1b-smoke")
+    params = lm_lib.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    shared = rng.integers(1, cfg.vocab, (8,)).astype(np.int32)
+    prompts = [np.concatenate([shared,
+                               rng.integers(1, cfg.vocab,
+                                            (int(l),)).astype(np.int32)])
+               for l in rng.integers(2, 10, 12)]
+
+    def run_stream(publish_every):
+        eng = ServeEngine(cfg, params, max_len=64, slots=4, prefill_chunk=8,
+                          decode_chunk=4, prefix_cache=True)
+        reqs = [eng.submit(p, max_new=8) for p in prompts]
+        walls, t, publishes = [], 0, 0
+        while eng.queue or any(r is not None for r in eng.active):
+            if publish_every and t and t % publish_every == 0:
+                eng.update(params=jax.tree.map(lambda x: x, eng.params),
+                           params_version=eng.params_version + 1)
+                publishes += 1
+            t0 = time.perf_counter()
+            assert eng.tick() and t < 2000
+            walls.append(time.perf_counter() - t0)
+            t += 1
+        dropped = sum(not r.done.is_set() for r in reqs)
+        return walls, publishes, dropped
+
+    run_stream(0)                                  # warm the tick jits
+    base, _, drop_b = run_stream(0)
+    pub, n_pub, drop_p = run_stream(3)
+    assert drop_b == 0 and drop_p == 0 and n_pub >= 2
+    p99 = lambda w: float(np.percentile(w, 99))
+    rows.append(("weight_publish/serve_base", p99(base) * 1e6,
+                 f"p99_ms={p99(base) * 1e3:.2f};ticks={len(base)}"))
+    rows.append(("weight_publish/serve_publish", p99(pub) * 1e6,
+                 f"p99_ms={p99(pub) * 1e3:.2f};ticks={len(pub)};"
+                 f"publishes={n_pub};dropped=0;"
+                 f"p99_pub_over_base={p99(pub) / max(p99(base), 1e-12):.2f}x"))
+    return rows
+
+
 def bench_kernels():
     """Kernel microbenchmarks (jnp chunked path timings on CPU + numerics
     vs oracle; the Pallas kernels are TPU-target, validated in tests)."""
@@ -911,7 +998,7 @@ def run(smoke: bool = False):
     # smoke=True (CI) keeps just the A/B comparisons that gate PRs.
     fns = (bench_step_path, bench_serve_throughput, bench_serve_spec,
            bench_serve_priority, bench_prefix_cache, bench_pool_placement,
-           bench_moe_dispatch, bench_reshaper_latency)
+           bench_weight_publish, bench_moe_dispatch, bench_reshaper_latency)
     if not smoke:
         # metric_overhead is the most delicate A/B of all (a 1-2% effect on
         # a ~10 ms call): it must run before the long Amber benches leave

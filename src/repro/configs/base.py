@@ -119,6 +119,12 @@ class ServeCfg:
     # sliding history window is pinned against eviction.
     prefix_pin_count: int = 3
     prefix_history: int = 512
+    # on a hot weight publish (ServeEngine.update(params=...) or a bare
+    # params_version bump) drop prefix snapshots captured under any other
+    # version: they can never match again (longest_match filters by
+    # version), so keeping them is pure memory waste.  False keeps them —
+    # only useful for workloads that flip back and forth between versions.
+    flush_prefix_on_publish: bool = True
 
     # Device placement (ServeEngine(placements={pool: mesh})): each slot
     # pool may own a real device group; params are replicated (or

@@ -13,9 +13,10 @@ from repro.engine.draft import (distill_draft, slice_draft_params,
                                 small_draft_cfg, truncated_draft_cfg)
 from repro.engine.engine import Engine
 from repro.engine.jobs import (Job, TickCandidate, accept_kind,
-                               checkpoint_workflow, layout_kind, pool_kind,
-                               prefill_workflow, prefix_seed_workflow,
-                               serve_decode_workflow, serve_tick_workflow,
+                               checkpoint_workflow, layout_kind,
+                               persist_workflow, pool_kind, prefill_workflow,
+                               prefix_seed_workflow, serve_decode_workflow,
+                               serve_tick_workflow, snapshot_workflow,
                                spec_kind, train_step_workflow)
 from repro.engine.prefix_cache import (PrefixAnalyzer, PrefixCache,
                                        request_fingerprint)
@@ -27,8 +28,9 @@ __all__ = ["DraftProposer", "Engine", "Job", "NgramProposer", "PROPOSERS",
            "PrefixAnalyzer", "PrefixCache", "Proposer", "Request",
            "ServeEngine", "SlotPool", "TickCandidate", "accept_kind",
            "build_slot_tick", "checkpoint_workflow", "distill_draft",
-           "layout_kind", "pool_kind", "prefill_workflow",
-           "prefix_seed_workflow", "request_fingerprint",
-           "serve_decode_workflow", "serve_tick_workflow",
-           "slice_draft_params", "small_draft_cfg", "spec_kind",
-           "train_step_workflow", "truncated_draft_cfg"]
+           "layout_kind", "persist_workflow", "pool_kind",
+           "prefill_workflow", "prefix_seed_workflow",
+           "request_fingerprint", "serve_decode_workflow",
+           "serve_tick_workflow", "slice_draft_params", "small_draft_cfg",
+           "snapshot_workflow", "spec_kind", "train_step_workflow",
+           "truncated_draft_cfg"]

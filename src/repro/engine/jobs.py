@@ -330,12 +330,45 @@ def prefix_seed_workflow(cached_tokens: int, suffix_tokens: int,
 
 
 def checkpoint_workflow(t_save: float) -> Workflow:
-    """Checkpoint as a blocking region between steps (the §2.6 barrier)."""
+    """Legacy blocking checkpoint: snapshot AND persist as one blocking
+    region between steps (the §2.6 barrier paid in full).  Kept as the
+    measured baseline the async split is benchmarked against
+    (``LoopConfig(ckpt_async=False)``)."""
     wf = Workflow()
     wf.add_op(Op("snapshot", "ml", cost_per_tuple=t_save,
                  source_cardinality=1.0))
     wf.add_op(Op("durable", "sink", cost_per_tuple=0.0))
     wf.add_edge("snapshot", "durable", blocking=True)
+    return wf
+
+
+def snapshot_workflow(t_snap: float) -> Workflow:
+    """The blocking half of the async checkpoint: one device→host copy —
+    a single device sync, no I/O.  The blocking edge into the barrier sink
+    is the only stall the training loop pays per checkpoint; everything
+    downstream of the captured host payload rides ``persist_workflow``."""
+    wf = Workflow()
+    wf.add_op(Op("snapshot", "ml", cost_per_tuple=t_snap,
+                 source_cardinality=1.0))
+    wf.add_op(Op("barrier", "sink", cost_per_tuple=0.0))
+    wf.add_edge("snapshot", "barrier", blocking=True)
+    return wf
+
+
+def persist_workflow(t_persist: float) -> Workflow:
+    """The pipelined half: host→disk serialization + fsync + atomic
+    publish + manifest ack, on the checkpointer's worker thread.  The
+    PIPELINED edge into the durable sink is the point of the split — the
+    persist region overlaps the next train step's regions, and the engine
+    prices the overlap from the measured ``ckpt_persist`` EMA (observed
+    from the worker thread at completion).  The durable-log barrier rides
+    the ack at the end of the region: recovery only restores acknowledged
+    checkpoints, so a crash mid-persist replays from the previous one."""
+    wf = Workflow()
+    wf.add_op(Op("persist", "ml", cost_per_tuple=t_persist,
+                 source_cardinality=1.0))
+    wf.add_op(Op("durable", "sink", cost_per_tuple=0.0))
+    wf.add_edge("persist", "durable")
     return wf
 
 
@@ -361,4 +394,9 @@ COST_DEFAULTS: Dict[str, float] = {
     # prior sits above the same-device seed write — it pays a transfer
     "serve_migrate": 0.004,
     "checkpoint": 0.50,
+    # async checkpoint split: the snapshot region (one device→host sync)
+    # is an order cheaper than the persist region (serialize+fsync), which
+    # is why persisting on the worker thread removes most of the stall
+    "ckpt_snapshot": 0.05,
+    "ckpt_persist": 0.45,
 }

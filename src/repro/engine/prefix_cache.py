@@ -100,6 +100,9 @@ class _Node:
     children: Dict[int, "_Node"] = dataclasses.field(default_factory=dict)
     snapshot: Any = None          # pool-row pytree (host numpy) or None
     pos: int = 0                  # tokens consumed by the snapshot ( == depth)
+    version: int = 0              # params_version the snapshot was captured
+    #                               under: state computed by OLD weights must
+    #                               never seed a slot serving NEW weights
     last_use: int = 0             # LRU clock value of the last hit/insert
     hits: int = 0
     refs: int = 0                 # in-flight requests seeded from this node
@@ -146,12 +149,16 @@ class PrefixCache:
         self._clock += 1
         return self._clock
 
-    def longest_match(self, tokens, limit: Optional[int] = None
-                      ) -> Optional[_Node]:
+    def longest_match(self, tokens, limit: Optional[int] = None,
+                      version: Optional[int] = None) -> Optional[_Node]:
         """Deepest snapshotted node whose path is a prefix of ``tokens``,
         at most ``limit`` tokens deep (the serving engine passes
         ``len(prompt) - 1``: at least one real prompt token must remain to
-        produce the first output logits).  Touches the LRU clock of the
+        produce the first output logits).  ``version`` (not None) restricts
+        matches to snapshots captured under that params version — after a
+        hot weight swap, old-version KV state must never seed a slot that
+        will decode under the new weights (it would replay stale state and
+        break greedy bit-identicality).  Touches the LRU clock of the
         returned node only — intermediate structural nodes carry no state
         worth aging."""
         toks = tuple(int(t) for t in tokens)
@@ -166,7 +173,8 @@ class PrefixCache:
                     toks[i:i + len(edge)] != edge:
                 break
             node, i = child, child.depth
-            if node.snapshot is not None and node.depth >= self.min_len:
+            if node.snapshot is not None and node.depth >= self.min_len \
+                    and (version is None or node.version == version):
                 best = node
         if best is None:
             self.misses += 1
@@ -203,14 +211,15 @@ class PrefixCache:
         upper.children[node.edge[0]] = node
         return upper
 
-    def insert(self, tokens, snapshot=None) -> Optional[_Node]:
+    def insert(self, tokens, snapshot=None, version: int = 0
+               ) -> Optional[_Node]:
         """Commit a token path into the tree, attaching ``snapshot`` (a
         captured pool-row pytree, normalized to host numpy via
-        :func:`to_host` by the capturing engine) at its end.  Paths shorter
-        than
+        :func:`to_host` by the capturing engine) at its end, tagged with the
+        ``version`` of the params it was computed under.  Paths shorter than
         ``min_len`` are not worth a node; re-inserting an existing path
-        refreshes its snapshot/LRU slot.  Returns the node (None when the
-        path was rejected as too short)."""
+        refreshes its snapshot/version/LRU slot.  Returns the node (None
+        when the path was rejected as too short)."""
         toks = tuple(int(t) for t in tokens)
         if len(toks) < self.min_len:
             return None
@@ -244,6 +253,7 @@ class PrefixCache:
                 self._snapshots += 1
             node.snapshot = snapshot
             node.pos = len(toks)
+            node.version = int(version)
             node.last_use = self._tick_clock()
             if toks in self._pinned_paths:
                 node.pinned = True
@@ -290,6 +300,24 @@ class PrefixCache:
             self._snapshots -= 1
             self.evictions += 1
             self._prune(victim)
+
+    def flush_versions(self, keep: int) -> int:
+        """Drop every snapshot whose version differs from ``keep`` — the
+        weight-publish hook: after a hot swap nothing captured under the old
+        weights can ever match again (``longest_match`` filters by version),
+        so the bytes are pure waste.  Nodes with live refs keep their
+        snapshot until the in-flight seed drains (the seeded request itself
+        joined under the old version and is version-gated out of
+        re-snapshotting).  Returns the number of snapshots dropped."""
+        dropped = 0
+        for n in self._snapshot_nodes():
+            if n.version != keep and n.refs == 0:
+                n.snapshot = None
+                self._snapshots -= 1
+                self.evictions += 1
+                dropped += 1
+                self._prune(n)
+        return dropped
 
     def pin(self, tokens) -> bool:
         """Protect a prefix from eviction (analyzer-driven).  Pins the node

@@ -149,6 +149,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core import messages as M
 from repro.core.breakpoints import GlobalCountBreakpoint, LocalBreakpoint
 from repro.engine.engine import Engine
 from repro.engine.jobs import (COST_DEFAULTS, Job, TickCandidate,
@@ -508,6 +509,11 @@ class Request:
     key: Any = None                      # private PRNG key (sampling)
     priority: str = "default"            # one of cfg.serve.classes
     pin_pool: Optional[int] = None       # admission restricted to this pool
+    joined_version: int = 0              # params_version at admission: a
+    #                                      request straddling a weight swap
+    #                                      (joined old, finished new) is
+    #                                      hybrid-state and must store
+    #                                      neither results nor snapshots
     tokens: List[int] = dataclasses.field(default_factory=list)
     pool: int = -1                       # slot pool joined (-1: queued)
     slot: int = -1                       # slot within the pool
@@ -692,6 +698,9 @@ class ServeEngine:
         from repro.engine.draft import slice_draft_params, truncated_draft_cfg
         self.draft_cfg: Optional[ArchConfig] = None
         self.draft_params = None
+        # remembered so a hot params publish can re-slice the self-draft
+        # (an independent draft is republished separately via draft_params)
+        self._self_draft = draft == "self"
         if draft is not None:
             assert draft == "self", f"unknown draft mode {draft!r}"
             assert draft_cfg is None and draft_params is None, \
@@ -1003,8 +1012,12 @@ class ServeEngine:
 
     def _evict(self, req: Request) -> None:
         sp = self._pool(req.pool)
+        # a request that straddled a weight swap (joined under an older
+        # params_version) ran partly on old weights: its slot state and its
+        # output are hybrid artifacts of neither version — store nothing
+        fresh = req.joined_version == self.params_version
         if self.prefix is not None:
-            if self.cfg.serve.snapshot_on_evict:
+            if self.cfg.serve.snapshot_on_evict and fresh:
                 # "commit extends the tree": snapshot the slot's full
                 # committed path (prompt + generated) so an agent-loop
                 # follow-up whose prompt extends this response seeds from
@@ -1015,15 +1028,19 @@ class ServeEngine:
                 )[:int(sp.pos_host[req.slot])]
                 if len(path) >= self.prefix.min_len and not (
                         (n := self.prefix.lookup(path)) is not None
-                        and n.snapshot is not None):
+                        and n.snapshot is not None
+                        and n.version == self.params_version):
                     self._snapshot_slot(sp, req.slot, path)
             if req.seed_node is not None:
                 self.prefix.release(req.seed_node)
                 req.seed_node = None
             # finished greedy outputs become exact-hit answers for repeats
-            self.prefix.result_store(req.prompt, req.max_new,
-                                     req.temperature, self.params_version,
-                                     req.output())
+            # (version-gated: a hybrid-state output keyed under the current
+            # version would serve an answer neither weight set produces)
+            if fresh:
+                self.prefix.result_store(req.prompt, req.max_new,
+                                         req.temperature,
+                                         self.params_version, req.output())
         sp.active[req.slot] = None
         req.pool = req.slot = -1
         req.t_done = time.perf_counter()
@@ -1057,7 +1074,8 @@ class ServeEngine:
         row = self.engine.run_job(
             job, lambda: jax.block_until_ready(snap_fn(sp.pool, slot)),
             extra=(pjob,))
-        self.prefix.insert(path, snapshot=to_host(row))
+        self.prefix.insert(path, snapshot=to_host(row),
+                           version=self.params_version)
 
     def _allowed_pools(self, req: Request) -> List[int]:
         if req.pin_pool is not None:
@@ -1131,12 +1149,17 @@ class ServeEngine:
             sp = self._pool(pid)
             slot = next(s for s in range(sp.slots) if sp.active[s] is None)
             req.pool, req.slot = pid, slot
+            req.joined_version = self.params_version
             sp.active[slot] = req
             node = None
             if self.prefix is not None and req.temperature <= 0:
-                # >= 1 prompt token must remain to produce the first logits
-                node = self.prefix.longest_match(req.prompt,
-                                                 limit=len(req.prompt) - 1)
+                # >= 1 prompt token must remain to produce the first logits;
+                # only snapshots captured under the CURRENT params version
+                # may seed — old-version KV state under new weights would
+                # replay stale state (the hot-swap staleness bug)
+                node = self.prefix.longest_match(
+                    req.prompt, limit=len(req.prompt) - 1,
+                    version=self.params_version)
             if node is not None and self.engine.choose_prefix_admission(
                     node.depth, len(req.prompt) - node.depth,
                     pool_id=sp.pool_id) == "seed":
@@ -1256,10 +1279,49 @@ class ServeEngine:
                 # in-flight seeded requests keep their (host) refs on the
                 # dropped tree; nothing reads it again, so just detach
                 self.prefix = None
-        if "params_version" in updates:
-            # hot weight swap: new version keys the result cache so stale
-            # answers cannot serve (old entries age out of the LRU)
-            self.params_version = int(updates["params_version"])
+        if "params" in updates:
+            # hot weight swap (the train->serve publish path): commit the
+            # incoming host trees once and rebind — the fresh object
+            # identity is what invalidates _params_for's per-device-group
+            # cache, and any tick already planned this round closed over
+            # the OLD reference at plan time, so it commits consistently
+            # (its requests are version-gated out of storing results).
+            self.params = jax.tree.map(jnp.asarray, updates["params"])
+            if self._self_draft:
+                from repro.engine.draft import slice_draft_params
+                self.draft_params = slice_draft_params(
+                    self.params, self.cfg, self.draft_cfg)
+            # an explicit params_version in the same update wins; a bare
+            # params swap auto-bumps so stale results can never serve
+            self._bump_version(int(updates.get(
+                "params_version", self.params_version + 1)))
+        elif "params_version" in updates:
+            # hot weight swap signaled out-of-band: new version keys the
+            # result cache so stale answers cannot serve (old entries age
+            # out of the LRU) and flushes stale prefix snapshots
+            self._bump_version(int(updates["params_version"]))
+
+    def _bump_version(self, version: int) -> None:
+        """Move to a new params version: snapshots captured under any other
+        version are flushed from the radix tree (they can never match again
+        — ``longest_match`` filters by version — so keeping them is pure
+        waste; ``serve.flush_prefix_on_publish=False`` keeps them for
+        workloads that flip between versions).  The result cache needs no
+        flush: its keys carry the version, old entries age out of the LRU."""
+        if version == self.params_version:
+            return
+        self.params_version = int(version)
+        if self.prefix is not None and self.cfg.serve.flush_prefix_on_publish:
+            self.prefix.flush_versions(self.params_version)
+
+    def update(self, **updates) -> None:
+        """Queue a hot update through the controller mailbox — applied at
+        the next tick boundary, like every control client's updates.
+        ``update(params=..., params_version=...)`` is the weight-publish
+        entry point (TrainLoop's ``publish_every`` hook calls it): in-flight
+        planned ticks finish on the old reference, requests admitted after
+        the boundary see the new weights, and zero requests drop."""
+        self.engine.controller.send(M.update(**updates))
 
     def _poll(self) -> bool:
         r = self.engine.poll(self.tick_no, 0, self._inspect)
@@ -1571,12 +1633,18 @@ class ServeEngine:
             # decode mid-tick: their rows hold generated tokens too.
             for r in part:
                 if (r.pool < 0 or r.prompt_off < self.prefix.min_len
-                        or int(sp.pos_host[r.slot]) != r.prompt_off):
+                        or int(sp.pos_host[r.slot]) != r.prompt_off
+                        or r.joined_version != self.params_version):
+                    # the version gate: a slot that joined before a weight
+                    # swap holds state computed under the OLD weights —
+                    # capturing it under the current version would poison
+                    # the tree for every later seed
                     continue
                 path = r.prompt[:r.prompt_off]
                 n = self.prefix.lookup(path)
-                if n is not None and n.snapshot is not None:
-                    continue
+                if n is not None and n.snapshot is not None \
+                        and n.version == self.params_version:
+                    continue          # stale-version snapshots re-capture
                 self._snapshot_slot(sp, r.slot, path)
         if spec:
             proposed = (L - 1) * len(part)

@@ -64,7 +64,7 @@ def lower_cell(arch_name, shape_name, mesh, remat="none", hlo_dir=None,
     if microbatches:
         shape = dataclasses.replace(shape, microbatches=microbatches)
     pspec = SH.param_specs(cfg, mesh)
-    t0 = time.time()
+    t0 = time.perf_counter()
     nl_moe = lm.n_moe_layers(cfg)
     plan_specs = (P(), P())
 
@@ -129,10 +129,10 @@ def lower_cell(arch_name, shape_name, mesh, remat="none", hlo_dir=None,
                 out_shardings=(None, cspecs),
             ).lower(lm.abstract(cfg, jnp.bfloat16), cache_abs, token,
                     *plan_abstract(cfg))
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
     txt = compiled.as_text()

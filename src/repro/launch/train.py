@@ -61,9 +61,9 @@ def main():
         print(f"recovered at step {int(loop.state['step'])}")
     else:
         loop = TrainLoop(cfg, stream, hyper, lc, reshaper=reshaper)
-    t0 = time.time()
+    t0 = time.perf_counter()
     hist = loop.run(args.steps)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     for h in hist[:: max(1, len(hist) // 20)]:
         extra = ""
         if "dropped" in h:

@@ -43,6 +43,14 @@ class LoopConfig:
     microbatches: int = 2
     ckpt_every: int = 0                  # 0 = off
     ckpt_dir: str = "/tmp/repro_ckpt"
+    # two-region checkpointing: the blocking device->host snapshot always
+    # runs between steps; with ckpt_async the host->disk persist runs on the
+    # Checkpointer worker thread, overlapped with the next step's regions
+    # (False = legacy blocking save, the measured baseline)
+    ckpt_async: bool = True
+    # publish host-side params to `publish_to` every N steps (0 = off):
+    # the train->serve weight-publishing hook (ROADMAP item 3)
+    publish_every: int = 0
     lr_scale: float = 1.0
     # step-path selection: "auto" pays the granulated interactivity tax only
     # when interactivity is in use (pending message / breakpoint / pause /
@@ -61,7 +69,8 @@ class TrainLoop:
                  loop_cfg: LoopConfig = LoopConfig(),
                  controller: Optional[Controller] = None,
                  reshaper: Optional[MoEReshaper] = None,
-                 seed: int = 0, engine: Optional[Engine] = None):
+                 seed: int = 0, engine: Optional[Engine] = None,
+                 publish_to: Any = None):
         self.cfg = cfg
         self.stream = stream
         self.hyper = hyper
@@ -96,6 +105,10 @@ class TrainLoop:
         else:
             self.plan_slots = self.plan_cum = None
         self.history: List[Dict[str, Any]] = []
+        # weight-publish sink: a ServeEngine (its .update() mailbox) or a
+        # bare Controller (.send); params go out as host-numpy trees
+        self.publish_to = publish_to
+        self._last_snapshot: Optional[Dict[str, Any]] = None
         self.ckpt = Checkpointer(self.lc.ckpt_dir) if self.lc.ckpt_every \
             else None
         if self.ckpt is not None and self.controller.durable_log_path is None:
@@ -337,19 +350,63 @@ class TrainLoop:
                     self._migrate(migs)
                 self._set_plan(ps, pc)
             if self.ckpt and (step + 1) % self.lc.ckpt_every == 0:
-                self.engine.run_job(Job("checkpoint"),
-                                    lambda: self.save(step + 1))
+                self.save(step + 1)
+            if self.publish_to is not None and self.lc.publish_every and \
+                    (step + 1) % self.lc.publish_every == 0:
+                self.publish(step + 1)
+        if self.ckpt is not None:
+            # completion barrier: every queued persist is durable (and any
+            # worker-side error re-raised here) before run() returns
+            self.ckpt.wait()
         return self.history
 
     # -------------------------------------------------------- fault tolerance
     def save(self, step: int) -> str:
+        """Two-region checkpoint (engine.jobs.snapshot_workflow /
+        persist_workflow): the blocking device->host snapshot runs inline as
+        a measured ``ckpt_snapshot`` job, then the host->disk persist either
+        queues on the Checkpointer worker (ckpt_async — its measured wall
+        time feeds the ``ckpt_persist`` EMA from the completion callback, so
+        the scheduler prices the overlapped region from observation) or runs
+        inline as the blocking baseline.  Returns the checkpoint path the
+        persist will (or did) publish."""
         extra = {"stream": self.stream.state(),
                  "plan_slots": None if self.plan_slots is None
                  else np.asarray(self.plan_slots),
                  "plan_cum": None if self.plan_cum is None
                  else np.asarray(self.plan_cum),
                  "lr_scale": self.lc.lr_scale}
-        return self.ckpt.save(step, self.state, self.controller.log, extra)
+        payload = self.engine.run_job(
+            Job("ckpt_snapshot"),
+            lambda: self.ckpt.snapshot(step, self.state,
+                                       self.controller.log, extra))
+        self._last_snapshot = payload
+        if self.lc.ckpt_async:
+            self.ckpt.persist_async(
+                payload, on_done=lambda dt: self.engine.observe(
+                    Job("ckpt_persist"), dt))
+        else:
+            self.engine.run_job(Job("ckpt_persist"),
+                                lambda: self.ckpt.persist(payload))
+        return self.ckpt._path(step)
+
+    def publish(self, version: int) -> None:
+        """Send the current host-side params to ``publish_to`` tagged with
+        ``version`` (the train step).  Reuses the checkpoint snapshot's
+        host copy when one was just taken at this step — publish and persist
+        then share a single device sync.  The sink applies the swap at its
+        own tick boundary (``ServeEngine.update`` mailbox semantics)."""
+        snap = self._last_snapshot
+        if snap is not None and snap["step"] == version:
+            params = snap["state"]["params"]
+        else:
+            params = jax.tree.map(np.asarray, self.state["params"])
+        target = self.publish_to
+        if hasattr(target, "update"):       # ServeEngine
+            target.update(params=params, params_version=version)
+        else:                               # bare Controller mailbox
+            from repro.core import messages as M
+            target.send(M.update(params=params, params_version=version))
 
     @classmethod
     def recover(cls, cfg: ArchConfig, stream: TokenStream,

@@ -1,0 +1,343 @@
+"""Async snapshot-then-persist checkpointing + live weight publishing.
+
+Checkpoint side: the two-region split (blocking device->host ``snapshot``,
+worker-thread host->disk ``persist``) must overlap the persist with the next
+training step, and the durable-log barrier (fsync discipline + the ack
+manifest) must guarantee recovery never sees a checkpoint the manifest does
+not acknowledge — a crash anywhere inside persist falls back to the
+previous acknowledged step and replays the control log from there (§2.6.2).
+
+Serve side: ``ServeEngine.update(params=..., params_version=...)`` hot-swaps
+target weights mid-stream with zero dropped requests; requests admitted
+after the swap are bit-identical to a fresh engine started on the new
+weights, the result cache never serves answers computed under old weights,
+and placed pools' per-device-group params copies invalidate by source
+identity on the next tick.
+"""
+import json
+import os
+import pickle
+import threading
+import time
+
+import numpy as np
+import pytest
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_arch
+from repro.core import messages as M
+from repro.data.synthetic import TokenStream
+from repro.engine.serve import ServeEngine
+from repro.models import lm
+from repro.runtime.loop import LoopConfig, TrainLoop
+from repro.runtime.serve import BatchedServer
+from repro.runtime.train import TrainHyper
+
+CFG = get_arch("gemma3-1b-smoke")
+MAX_LEN = 64
+
+
+def mk_loop(tmp, ckpt_every=0, ckpt_async=True, publish_every=0,
+            publish_to=None):
+    stream = TokenStream(vocab=CFG.vocab, seq_len=16, global_batch=4, seed=3)
+    return TrainLoop(CFG, stream, TrainHyper(),
+                     LoopConfig(microbatches=2, ckpt_every=ckpt_every,
+                                ckpt_dir=tmp, ckpt_async=ckpt_async,
+                                publish_every=publish_every),
+                     publish_to=publish_to)
+
+
+# --------------------------------------------------------- checkpointer unit
+
+def test_list_steps_full_stem_parse(tmp_path):
+    """Regression: steps >= 10**8 produce 9-digit filenames; the old fixed
+    ``int(f[5:13])`` slice silently mis-parsed them, so latest-step
+    selection and retention GC both misbehaved."""
+    ck = Checkpointer(str(tmp_path), keep=3)
+    big = 10**8
+    for s in (7, big):
+        ck.save(s, {"w": np.arange(3)})
+    assert ck.list_steps() == [7, big]
+    assert ck.latest_step() == big
+    assert ck.restore()["step"] == big
+    assert ck.restore(step=7)["step"] == 7
+
+
+def test_snapshot_decouples_from_live_state(tmp_path):
+    """The snapshot region's payload is a host copy: mutating device state
+    afterwards (the next train step) must not leak into what persists."""
+    ck = Checkpointer(str(tmp_path))
+    state = {"w": np.arange(4.0)}
+    payload = ck.snapshot(3, state)
+    state["w"] += 100.0                 # "next step" mutates live state
+    seen = []
+    ck.persist_async(payload, on_done=seen.append)
+    ck.wait()
+    np.testing.assert_array_equal(ck.restore()["state"]["w"],
+                                  np.arange(4.0))
+    assert len(seen) == 1 and seen[0] > 0.0   # measured persist wall time
+
+
+def test_wait_reraises_worker_error(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    payload = ck.snapshot(1, {"w": np.zeros(2)})
+    ck.persist_async(payload)
+    ck.wait()
+    bad = dict(payload, step=2)
+    ck.dir = str(tmp_path / "gone")     # worker-side failure: dir vanished
+    ck.persist_async(bad)
+    with pytest.raises(OSError):
+        ck.wait()
+
+
+def test_torn_tmp_write_is_invisible(tmp_path):
+    """Crash mid-tmp-write: a partial ``.tmp`` file was never renamed, so
+    restore never even considers it and returns the previous step."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": np.ones(2)})
+    with open(ck._path(2) + ".tmp", "wb") as f:
+        f.write(pickle.dumps({"step": 2})[:7])    # truncated mid-write
+    assert ck.list_steps() == [1]
+    assert ck.restore()["step"] == 1
+
+
+def test_published_but_unacked_is_not_restorable(tmp_path):
+    """Crash between the atomic rename and the manifest ack: the file is
+    published but the durable log never acknowledged it, so recovery must
+    conservatively fall back to the previous acknowledged step."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(2, {"w": np.ones(2) * 2})
+    ck.save(4, {"w": np.ones(2) * 4})
+    # simulate the crash point: step 4's ack line never made it to disk
+    lines = open(ck._manifest()).read().splitlines()
+    assert [json.loads(ln)["step"] for ln in lines] == [2, 4]
+    with open(ck._manifest(), "w") as f:
+        f.write(lines[0] + "\n")
+    assert ck.list_steps() == [2, 4]          # both files published...
+    assert ck.restorable_steps() == [2]       # ...but only 2 acknowledged
+    assert ck.restore()["step"] == 2
+
+
+def test_acked_but_corrupt_falls_back(tmp_path):
+    """Byte-level corruption of an acknowledged file (despite the fsync
+    discipline: disk trouble) must fall back to the next older readable
+    checkpoint instead of raising."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": np.ones(2)})
+    ck.save(2, {"w": np.ones(2) * 2})
+    with open(ck._path(2), "wb") as f:
+        f.write(b"\x80\x04corrupt")
+    payload = ck.restore()
+    assert payload["step"] == 1
+
+
+def test_torn_manifest_line_skipped(tmp_path):
+    """A torn trailing ack line (crash mid-ack-write) is not an ack."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": np.zeros(1)})
+    ck.save(2, {"w": np.zeros(1)})
+    with open(ck._manifest(), "a") as f:
+        f.write('{"step": ')                      # torn line
+    assert ck.restorable_steps() == [1, 2]
+    assert ck.restore()["step"] == 2
+
+
+def test_legacy_dir_without_manifest(tmp_path):
+    """Pre-barrier directories (no MANIFEST.log) keep restoring: every
+    published file is trusted, the old behavior."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, {"w": np.ones(3)})
+    os.remove(ck._manifest())
+    ck2 = Checkpointer(str(tmp_path))
+    assert ck2.acked_steps() is None
+    assert ck2.restore()["step"] == 5
+
+
+# ----------------------------------------------------- persist/step overlap
+
+def test_persist_overlaps_next_step(tmp_path):
+    """The load-bearing overlap property: with ckpt_async the next training
+    step runs while the persist worker is still writing.  The persist for
+    the step-2 checkpoint is blocked on an event; the loop must still
+    complete steps 3 and 4 before the persist is released."""
+    loop = mk_loop(str(tmp_path), ckpt_every=2)
+    started, release = threading.Event(), threading.Event()
+    orig = Checkpointer.persist
+
+    def gated_persist(self, payload):
+        started.set()
+        assert release.wait(30), "test driver never released the persist"
+        return orig(self, payload)
+
+    Checkpointer.persist = gated_persist
+    try:
+        th = threading.Thread(target=lambda: loop.run(4))
+        th.start()
+        assert started.wait(60), "persist never started"
+        deadline = time.perf_counter() + 60
+        while len(loop.history) < 4:          # steps 3,4 run DURING persist
+            assert time.perf_counter() < deadline, \
+                "next steps did not overlap the in-flight persist"
+            time.sleep(0.01)
+        release.set()
+        th.join(60)
+        assert not th.is_alive()
+    finally:
+        Checkpointer.persist = orig
+        release.set()
+    # both checkpoints landed durably by the time run() returned (wait())
+    assert loop.ckpt.restorable_steps() == [2, 4]
+
+
+def test_blocking_baseline_unchanged(tmp_path):
+    """ckpt_async=False is the legacy blocking save: persisted inline,
+    restorable immediately, same payload shape."""
+    loop = mk_loop(str(tmp_path), ckpt_every=2, ckpt_async=False)
+    loop.run(2)
+    payload = loop.ckpt.restore()
+    assert payload["step"] == 2
+    assert payload["extra"]["lr_scale"] == 1.0
+
+
+@pytest.mark.slow
+def test_crash_mid_persist_recovers_previous_with_replay(tmp_path):
+    """End-to-end durable-log barrier (§2.6.2): checkpoints at steps 2 and
+    4 with an lr update logged at step 2; the crash lands between step 4's
+    publish and its ack.  Recovery must come up at step 2 — never the
+    unacknowledged step 4 — and replay the logged update at its recorded
+    point, bit-identically to an uninterrupted run."""
+    d = str(tmp_path / "a")
+    ref = mk_loop(d, ckpt_every=2)
+    ref.run(2)
+    ref.controller.send(M.update(lr_scale=0.25))
+    ref.run(2)
+    ref_params = jax.tree.leaves(ref.state["params"])
+
+    db = str(tmp_path / "b")
+    loop = mk_loop(db, ckpt_every=2)
+    loop.run(2)
+    loop.controller.send(M.update(lr_scale=0.25))
+    loop.run(2)
+    del loop
+    # crash point: step 4's ack line never hit the disk
+    man = os.path.join(db, Checkpointer.MANIFEST)
+    lines = open(man).read().splitlines()
+    with open(man, "w") as f:
+        f.write("\n".join(lines[:-1]) + "\n")
+
+    stream = TokenStream(vocab=CFG.vocab, seq_len=16, global_batch=4, seed=3)
+    rec = TrainLoop.recover(CFG, stream, TrainHyper(),
+                            LoopConfig(microbatches=2, ckpt_every=2,
+                                       ckpt_dir=db))
+    assert int(rec.state["step"]) == 2
+    rec.run(2)
+    assert rec.lc.lr_scale == 0.25
+    for a, b in zip(ref_params, jax.tree.leaves(rec.state["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------ live weight publish
+
+def _oracle(params, prompt, max_new):
+    return BatchedServer(CFG, params, max_len=MAX_LEN).generate_static(
+        np.asarray(prompt, np.int32)[None], max_new=max_new)[0]
+
+
+def test_publish_zero_drop_mid_stream():
+    """Hot weight swap with GENUINELY different weights: every in-flight
+    request completes (zero drops), requests admitted after the swap are
+    bit-identical to a fresh engine started on the new weights, and the
+    result cache never serves answers computed under the old weights —
+    neither a pre-swap stored answer nor a hybrid straddler's output."""
+    p1 = lm.init(CFG, jax.random.PRNGKey(0))
+    p2 = lm.init(CFG, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(7)
+    eng = ServeEngine(CFG, p1, max_len=MAX_LEN, slots=2, prefill_chunk=4,
+                      decode_chunk=2, prefix_cache=True)
+    shared = rng.integers(1, CFG.vocab, (6,)).astype(np.int32)
+    prompts = [np.concatenate([shared,
+                               rng.integers(1, CFG.vocab, (l,)).astype(
+                                   np.int32)]) for l in (3, 5, 2, 4)]
+    # request 0 finishes pre-swap (its answer lands in the result cache);
+    # request 1 straddles the swap (admitted old, finished new)
+    done_pre = eng.submit(prompts[0], max_new=4)
+    while not done_pre.done.is_set():
+        assert eng.tick()
+    np.testing.assert_array_equal(done_pre.output(),
+                                  _oracle(p1, prompts[0], 4))
+    straddler = eng.submit(prompts[1], max_new=12)
+    for _ in range(2):                  # partially decoded under p1
+        assert eng.tick()
+    assert not straddler.done.is_set()
+    eng.update(params=jax.tree.map(np.asarray, p2), params_version=1)
+    post = [eng.submit(p, max_new=6) for p in prompts[2:]]
+    # exact repeats of the pre-swap prompts: old-version cache entries and
+    # hybrid outputs must NOT answer them under the new version
+    repeat0 = eng.submit(prompts[0], max_new=4)
+    repeat1 = eng.submit(prompts[1], max_new=12)
+    ticks = 0
+    while eng.queue or any(r is not None for r in eng.active):
+        assert eng.tick() and ticks < 1000
+        ticks += 1
+    assert eng.params_version == 1
+    # zero drops: every request, including the straddler, completed in full
+    for r in (done_pre, straddler, repeat0, repeat1, *post):
+        assert r.done.is_set() and len(r.tokens) >= r.max_new
+    # post-swap admissions are bit-identical to a fresh engine on p2
+    for p, r in zip(prompts[2:], post):
+        np.testing.assert_array_equal(r.output(), _oracle(p2, p, 6))
+    np.testing.assert_array_equal(repeat0.output(),
+                                  _oracle(p2, prompts[0], 4))
+    np.testing.assert_array_equal(repeat1.output(),
+                                  _oracle(p2, prompts[1], 12))
+
+
+def test_publish_invalidates_placed_pool_params():
+    """A placed pool's per-device-group params copy re-commits on the first
+    tick after a publish: the cache keys on source identity, and the swap
+    rebinds ``eng.params`` to a fresh tree."""
+    p1 = lm.init(CFG, jax.random.PRNGKey(0))
+    p2 = lm.init(CFG, jax.random.PRNGKey(1))
+    dev = jax.devices()[0]
+    eng = ServeEngine(CFG, p1, max_len=MAX_LEN, slots=2, prefill_chunk=4,
+                      decode_chunk=2, placements={0: [dev]})
+    r1 = eng.submit(np.arange(1, 6, dtype=np.int32), max_new=3)
+    while not r1.done.is_set():
+        assert eng.tick()
+    sp = eng.pools[0]
+    ent = eng._pool_params[sp.devices()]
+    old_src = ent["src"]
+    assert old_src is eng.params
+    eng.update(params=jax.tree.map(np.asarray, p2), params_version=1)
+    prompt = np.arange(2, 9, dtype=np.int32)
+    r2 = eng.submit(prompt, max_new=4)
+    while not r2.done.is_set():
+        assert eng.tick()
+    ent = eng._pool_params[sp.devices()]
+    assert ent["src"] is eng.params and ent["src"] is not old_src
+    np.testing.assert_array_equal(r2.output(), _oracle(p2, prompt, 4))
+
+
+def test_trainloop_publish_hook_end_to_end(tmp_path):
+    """The full loop: TrainLoop(publish_to=ServeEngine, publish_every=2)
+    pushes host params through the serve mailbox every 2 steps (reusing the
+    checkpoint snapshot's host copy when steps align); the serve engine
+    swaps at its next tick boundary and greedy outputs match a fresh engine
+    on the trained weights."""
+    serve = ServeEngine(CFG, lm.init(CFG, jax.random.PRNGKey(0)),
+                        max_len=MAX_LEN, slots=2, prefill_chunk=4,
+                        decode_chunk=2)
+    loop = mk_loop(str(tmp_path), ckpt_every=2, publish_every=2,
+                   publish_to=serve)
+    loop.run(2)
+    # the publish reused the step-2 checkpoint snapshot: one device sync
+    assert loop._last_snapshot is not None
+    assert loop._last_snapshot["step"] == 2
+    prompt = np.arange(3, 10, dtype=np.int32)
+    req = serve.submit(prompt, max_new=5)
+    while not req.done.is_set():
+        assert serve.tick()
+    assert serve.params_version == 2
+    trained = jax.tree.map(np.asarray, loop.state["params"])
+    np.testing.assert_array_equal(req.output(), _oracle(trained, prompt, 5))

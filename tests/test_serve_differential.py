@@ -49,7 +49,8 @@ MAX_LEN = 64
 SLOTS = (1, 2, 3)
 PREFILL_CHUNKS = (1, 2, 4, 8)
 DECODE_CHUNKS = (1, 2, 4)
-CTL_KINDS = ("pause_batch", "update_chunks", "toggle_spec", "update_draft")
+CTL_KINDS = ("pause_batch", "update_chunks", "toggle_spec", "update_draft",
+             "publish_params")
 # draft-proposer axis: no draft / truncated self-draft (random-init, so its
 # acceptance is ~0 — the all-reject path) / the target itself as draft
 # (acceptance ~1 — the max-commit path).  Both ends must be bit-identical.
@@ -101,6 +102,15 @@ def _ctl_batch(eng, kind, rng):
                 lambda x: -x, eng.draft_params)))
         else:
             ctl.send(M.update(draft_params=None))
+    elif kind == "publish_params":
+        # mid-stream weight publish with VALUE-identical params under a
+        # fresh object identity + version bump: exercises every hot-swap
+        # invalidation path (_params_for identity cache, prefix-tree
+        # version flush, result-cache re-keying, joined_version gating of
+        # stores) while outputs stay oracle-comparable — genuinely new
+        # weights are covered in tests/test_async_checkpoint.py
+        ctl.send(M.update(params=jax.tree.map(lambda x: x, eng.params),
+                          params_version=eng.params_version + 1))
 
 
 def _gen_prompts(rng, n_req):
@@ -301,6 +311,47 @@ def test_differential_spec_forced_draft_arm(draft):
     for p, r in zip(prompts, reqs):
         np.testing.assert_array_equal(r.output(), oracle(p, 12),
                                       err_msg=f"draft={draft} plen={len(p)}")
+
+
+def test_differential_weight_swap_prefix():
+    """Force the axis combination the random sweep draws only rarely: a
+    mid-stream weight publish with ``prefix_cache`` on and shared-prefix
+    prompts.  Before the fix, old-version radix snapshots survived the
+    swap and ``longest_match`` ignored the version, so a post-swap request
+    seeded from state computed under the old weights (silently wrong under
+    a real swap).  Value-identical params keep the oracle valid while the
+    version bump drives every invalidation path."""
+    params, _ = _fixture()
+    rng = np.random.default_rng(PYTEST_SEED + 377)
+    eng = ServeEngine(CFG, params, max_len=MAX_LEN, slots=2,
+                      prefill_chunk=4, decode_chunk=2, prefix_cache=True)
+    # force-seed admissions so the radix path (not just the result cache)
+    # is exercised whatever the CostBook would choose on this machine
+    eng.engine.choose_prefix_admission = lambda *a, **k: "seed"
+    shared = rng.integers(1, CFG.vocab, (8,)).astype(np.int32)
+    prompts = [np.concatenate([shared,
+                               rng.integers(1, CFG.vocab, (l,)).astype(
+                                   np.int32)]) for l in (3, 5, 2, 7)]
+    first = [eng.submit(p, max_new=6) for p in prompts[:2]]
+    eng.run_until_done()
+    assert eng.prefix.snapshots > 0, "no prefix snapshot captured"
+    old_v = eng.params_version
+    eng.update(params=jax.tree.map(lambda x: x, eng.params),
+               params_version=old_v + 1)
+    second = [eng.submit(p, max_new=6) for p in prompts[2:]]
+    # repeat of a pre-swap prompt: its old-version result-cache entry must
+    # NOT answer it under the new version
+    repeat = eng.submit(prompts[0], max_new=6)
+    eng.run_until_done()
+    assert eng.params_version == old_v + 1
+    # flush-on-publish dropped every old-version snapshot; whatever was
+    # captured since carries the new version
+    for n in eng.prefix._snapshot_nodes():
+        assert n.version == eng.params_version
+    for p, r in zip(prompts, first + second):
+        np.testing.assert_array_equal(r.output(), oracle(p, 6),
+                                      err_msg=f"plen={len(p)}")
+    np.testing.assert_array_equal(repeat.output(), oracle(prompts[0], 6))
 
 
 # --------------------------------------------------- hypothesis-driven sweep
