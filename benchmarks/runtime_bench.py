@@ -988,14 +988,14 @@ def bench_kernels():
     return rows
 
 
-def run(smoke: bool = False):
-    import gc
-    rows = []
-    # timing-sensitive comparisons (step_path, serve, reshaper) run FIRST:
-    # the long-running Amber benches leave the allocator/caches warm in ways
-    # that skew both sides of a later A/B comparison; gc between benches
-    # frees each bench's loops/params before the next one times anything.
-    # smoke=True (CI) keeps just the A/B comparisons that gate PRs.
+def benches(smoke: bool = False):
+    """Per-bench registry for ``run.py --only`` and per-bench timeouts.
+    Order matters: timing-sensitive comparisons (step_path, serve,
+    reshaper) run FIRST — the long-running Amber benches leave the
+    allocator/caches warm in ways that skew both sides of a later A/B
+    comparison.  smoke=True (CI) keeps just the A/B comparisons that gate
+    PRs.  Each entry gc-collects after itself so one bench's loops/params
+    are freed before the next one times anything."""
     fns = (bench_step_path, bench_serve_throughput, bench_serve_spec,
            bench_serve_priority, bench_prefix_cache, bench_pool_placement,
            bench_weight_publish, bench_moe_dispatch, bench_reshaper_latency)
@@ -1006,7 +1006,21 @@ def run(smoke: bool = False):
         fns += (bench_metric_overhead, bench_pause_latency,
                 bench_breakpoint_tau, bench_fault_tolerance,
                 bench_moe_reshape, bench_kernels)
-    for fn in fns:
+
+    def wrap(fn):
+        def thunk():
+            import gc
+            try:
+                return fn()
+            finally:
+                gc.collect()
+        return thunk
+
+    return [(fn.__name__.removeprefix("bench_"), wrap(fn)) for fn in fns]
+
+
+def run(smoke: bool = False):
+    rows = []
+    for _, fn in benches(smoke):
         rows.extend(fn())
-        gc.collect()
     return rows

@@ -186,6 +186,81 @@ def score_choices(wf: Workflow, cm: CostModel,
     return scored
 
 
+# ----------------------------------------------------------- SLO grading
+
+def percentile(xs, q: float) -> float:
+    """Deterministic nearest-rank percentile (``q`` in [0, 100]) — the
+    SLO-grading primitive.  Nearest-rank (not interpolated) so a grade
+    computed from N latency samples is exactly reproducible across numpy
+    versions and never manufactures a latency no request actually saw.
+    Empty input grades as +inf: a scenario that produced no samples for a
+    bounded metric must fail the bound, not vacuously pass it."""
+    xs = sorted(float(x) for x in xs)
+    if not xs:
+        return float("inf")
+    q = min(max(float(q), 0.0), 100.0)
+    rank = max(int(-(-q / 100.0 * len(xs) // 1)), 1)   # ceil, >= 1
+    return xs[rank - 1]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSLO:
+    """One scenario's service-level objective over measured serve behavior.
+
+    All latency bounds are in *virtual ticks* (scheduling rounds), not wall
+    seconds: the gauntlet grades scheduling quality, and tick-denominated
+    metrics are deterministic across machines where wall-clock ones embed
+    the host's speed.  ``None`` disables a bound.  ``scope`` names the
+    priority class the bound applies to (``None``: all requests pooled) —
+    a scenario lists one SLO per class it cares about."""
+    scope: Optional[str] = None       # priority class (None: all requests)
+    p50_ttft: Optional[float] = None  # median first-response bound (ticks)
+    p99_ttft: Optional[float] = None  # tail first-response bound (ticks)
+    min_goodput: Optional[float] = None   # committed tokens per tick, >=
+    max_deferred: Optional[int] = None    # aging-bound ceiling (ticks)
+    max_dropped: int = 0              # dropped requests allowed (always 0
+    #                                   today: the engine never sheds load)
+
+
+def grade_slo(metrics: Dict[str, float],
+              slos: List[ServeSLO]) -> Tuple[bool, Dict[str, str]]:
+    """Grade measured scenario metrics against a list of SLOs.
+
+    ``metrics`` carries per-scope keys — ``p50_ttft``/``p99_ttft``/
+    ``goodput``/``max_deferred``/``dropped`` for the pooled scope and
+    ``<cls>/p50_ttft`` etc. for class scopes (the shape
+    ``loadgen.summarize`` emits).  Returns ``(passed, detail)`` where
+    ``detail`` maps each checked criterion to ``"pass:<measured>"`` or
+    ``"FAIL:<measured>><bound>"`` — the row the gauntlet prints, so a CI
+    failure names the violated bound directly.  A bound whose metric is
+    missing fails: silence is not compliance."""
+    detail: Dict[str, str] = {}
+    ok = True
+
+    def check(scope, name, bound, larger_ok=False):
+        nonlocal ok
+        if bound is None:
+            return
+        key = f"{scope}/{name}" if scope else name
+        v = metrics.get(key)
+        good = v is not None and (v >= bound if larger_ok else v <= bound)
+        cmp = ">=" if larger_ok else "<="
+        if good:
+            detail[key] = f"pass:{v:.2f}{cmp}{bound:g}"
+        else:
+            ok = False
+            detail[key] = (f"FAIL:missing{cmp}{bound:g}" if v is None
+                           else f"FAIL:{v:.2f}!{cmp}{bound:g}")
+
+    for s in slos:
+        check(s.scope, "p50_ttft", s.p50_ttft)
+        check(s.scope, "p99_ttft", s.p99_ttft)
+        check(s.scope, "goodput", s.min_goodput, larger_ok=True)
+        check(s.scope, "max_deferred", s.max_deferred)
+        check(s.scope, "dropped", s.max_dropped)
+    return ok, detail
+
+
 # ------------------------------------------------------------- ML mapping
 
 @dataclasses.dataclass

@@ -7,13 +7,17 @@ book + decisions), ``engine.jobs`` (the job -> region-workflow mapping), and
 makes prefilled state a reusable artifact: a radix tree of slot-row
 snapshots plus an exact-hit result cache, consulted at admission through a
 measured FRT decision.  ``runtime.loop`` and ``runtime.serve`` are clients
-of this layer.
+of this layer.  ``engine.loadgen`` generates the scenario-diverse
+workloads (and the virtual-time drive harness) the gauntlet grades;
+``engine.autotune`` closes the loop, tuning the engine's own knobs from
+windowed measurement under the same CostBook discipline.
 """
+from repro.engine.autotune import AutoTuner, Knob
 from repro.engine.draft import (distill_draft, slice_draft_params,
                                 small_draft_cfg, truncated_draft_cfg)
 from repro.engine.engine import Engine
 from repro.engine.jobs import (Job, TickCandidate, accept_kind,
-                               checkpoint_workflow, layout_kind,
+                               checkpoint_workflow, knob_kind, layout_kind,
                                persist_workflow, pool_kind, prefill_workflow,
                                prefix_seed_workflow, serve_decode_workflow,
                                serve_tick_workflow, snapshot_workflow,
@@ -24,11 +28,12 @@ from repro.engine.serve import (PROPOSERS, DraftProposer, NgramProposer,
                                 Proposer, Request, ServeEngine, SlotPool,
                                 build_slot_tick)
 
-__all__ = ["DraftProposer", "Engine", "Job", "NgramProposer", "PROPOSERS",
+__all__ = ["AutoTuner", "DraftProposer", "Engine", "Job", "Knob",
+           "NgramProposer", "PROPOSERS",
            "PrefixAnalyzer", "PrefixCache", "Proposer", "Request",
            "ServeEngine", "SlotPool", "TickCandidate", "accept_kind",
            "build_slot_tick", "checkpoint_workflow", "distill_draft",
-           "layout_kind", "persist_workflow", "pool_kind",
+           "knob_kind", "layout_kind", "persist_workflow", "pool_kind",
            "prefill_workflow", "prefix_seed_workflow",
            "request_fingerprint", "serve_decode_workflow",
            "serve_tick_workflow", "slice_draft_params", "small_draft_cfg",

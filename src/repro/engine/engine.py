@@ -76,6 +76,7 @@ class Engine:
         self._serve_rounds: Dict[int, int] = {}
         self._seed_rounds: Dict[int, int] = {}
         self._compact_rounds: Dict[int, int] = {}
+        self._knob_rounds: Dict[str, int] = {}
         self._cm = CostModel(parallelism=1.0)
 
     # ---------------------------------------------------------- control plane
@@ -466,6 +467,44 @@ class Engine:
                                 pool=pool_id, scores=scores, inputs=inputs)
         return self._decide("serve_decode_arm", best, pool=pool_id,
                             scores=scores, inputs=inputs)
+
+    def choose_knob(self, name: str, values: Tuple[Any, ...]) -> Any:
+        """Pick the next arm for one tuned engine knob (autotune's
+        meta-decision): the same bootstrap → exploit → re-explore
+        discipline every other choice here follows, over the windowed
+        cost-per-token EMAs the AutoTuner records under
+        ``jobs.knob_kind(name, value)``.
+
+        Bootstrap visits every unmeasured arm in listed order (a knob
+        value's cost can only be learned by living under it for a
+        window); once all arms carry an EMA the cheapest wins; and every
+        16th round the losers rotate through a re-explore slot — knob
+        costs are workload-dependent, so a value that lost under
+        yesterday's traffic must keep getting re-measured under today's.
+        The chosen arm lands in the decision deque like every ``choose_*``
+        call, so ``dump_decisions`` explains knob moves with the same
+        scores/inputs schema."""
+        assert values, f"knob {name} offers no values"
+        scores: Dict[str, float] = {}
+        for v in values:
+            t = self.costs.estimate(J.knob_kind(name, v))
+            if t is None:
+                self._decide("autotune_knob", str(v), knob=name,
+                             why="bootstrap")
+                return v
+            scores[str(v)] = t
+        best = min(scores, key=scores.get)
+        self._knob_rounds[name] = self._knob_rounds.get(name, 0) + 1
+        r = self._knob_rounds[name]
+        if r % 16 == 0 and len(values) > 1:
+            losers = sorted(k for k in scores if k != best)
+            loser = losers[(r // 16 - 1) % len(losers)]
+            self._decide("autotune_knob", loser, knob=name,
+                         why="re-explore", scores=scores, inputs=scores)
+            return next(v for v in values if str(v) == loser)
+        self._decide("autotune_knob", best, knob=name, scores=scores,
+                     inputs=scores)
+        return next(v for v in values if str(v) == best)
 
     def choose_compact(self, pool_id: int) -> bool:
         """Compact vs full batch layout for an eligible decode tick (at

@@ -237,6 +237,18 @@ def layout_kind(compact: bool, pool_id: int) -> str:
     return f"serve_tick_{'compact' if compact else 'full'}:p{pool_id}"
 
 
+def knob_kind(name: str, value) -> str:
+    """CostBook key for one (engine knob, arm value) pair — the autotune
+    meta-decision's measurement substrate.  Each arm of a tuned knob
+    (``spec_len=4``, ``prefill_chunk=16``, ...) accumulates its own
+    windowed cost-per-token EMA while it is the live setting, so
+    ``Engine.choose_knob`` scores knob values the same way every other
+    Maestro decision scores its arms: from measured behavior, not
+    assumption.  The value is embedded in the key verbatim (knob values
+    are small ints/floats), so distinct arms can never alias."""
+    return f"autotune:{name}={value}"
+
+
 def serve_decode_workflow(arm: str, decode_slots: int, chunk: int,
                           t_token: float, accept: float = 0.0) -> Workflow:
     """One decode-composition tick as a region workflow, per arm.

@@ -657,7 +657,8 @@ class ServeEngine:
                  draft: Optional[str] = None,
                  draft_cfg: Optional[ArchConfig] = None,
                  draft_params=None,
-                 placements: Optional[Dict[int, Any]] = None):
+                 placements: Optional[Dict[int, Any]] = None,
+                 autotune: Any = False):
         self.cfg = cfg
         self.params = params
         self.engine = engine or Engine()
@@ -676,6 +677,16 @@ class ServeEngine:
         # per-pool compact-vs-full per-token EMAs; True/False pins it.
         self.compact_decode = compact_decode
         self.compact_ticks = 0
+        # tunable knobs, seeded from config but hot-updatable (update()
+        # handlers + the AutoTuner meta-controller): the live speculative
+        # draft length, and the compaction-eligibility fraction — a decode
+        # tick is compact-eligible when its participants fit in
+        # ``int(slots * compact_frac)`` lanes.  0.5 reproduces the
+        # historical ``slots // 2`` gate exactly.  Hot spec_len changes are
+        # safe mid-stream: _tick_len caps L against every participant's
+        # cache headroom and _plan_tick skips slots that would overrun.
+        self.spec_len = int(cfg.serve.spec_len)
+        self.compact_frac = 0.5
         # speculative in-tick decoding (see module docstring): offers the
         # engine extra tick arms — proposer draft + chunk-scan verify —
         # whose use is decided per tick from measured per-arm
@@ -781,6 +792,17 @@ class ServeEngine:
         self.tokens_out = 0
         self._rid = itertools.count()
         self.hit_breakpoints: List[str] = []
+        # closed-loop knob tuning (engine.autotune): the meta-controller
+        # that makes the engine's OWN knobs (spec_len, compact_frac,
+        # prefill_chunk, class weights) a result-aware Maestro decision.
+        # ``autotune=True`` wires the default knob set; a dict passes
+        # AutoTuner kwargs (knobs=, window=, ...); False leaves the knobs
+        # config-pinned.  Built last: the tuner reads live engine state.
+        self.autotuner = None
+        if autotune:
+            from repro.engine.autotune import AutoTuner
+            kw = dict(autotune) if isinstance(autotune, dict) else {}
+            self.autotuner = AutoTuner(self, **kw)
 
     # ------------------------------------------------ single-pool back-compat
     @property
@@ -985,7 +1007,7 @@ class ServeEngine:
         assert prompt.size >= 1, "empty prompt"
         need = prompt.size + max_new + max(
             self.prefill_chunk, self.decode_chunk,
-            self.cfg.serve.spec_len if self.spec_decode else 0)
+            self.spec_len if self.spec_decode else 0)
         assert need <= self.max_len, \
             f"prompt+max_new+chunk={need} exceeds max_len={self.max_len}"
         priority = priority or self._default_class
@@ -1245,6 +1267,18 @@ class ServeEngine:
                 "classes": {n: {"weight": c.weight,
                                 "max_defer": c.max_defer}
                             for n, c in self.classes.items()},
+                # live tunable-knob values + the meta-controller's state:
+                # the telemetry schema the gauntlet/autotune stack reads
+                "knobs": {"spec_len": self.spec_len,
+                          "compact_frac": self.compact_frac,
+                          "prefill_chunk": self.prefill_chunk,
+                          "decode_chunk": self.decode_chunk,
+                          "class_weights": {n: c.weight
+                                            for n, c in
+                                            self.classes.items()}},
+                "autotune": (self.autotuner.snapshot()
+                             if self.autotuner is not None
+                             else {"enabled": False}),
                 "engine": self.engine.inspect()}
         return info
 
@@ -1257,6 +1291,32 @@ class ServeEngine:
             self.prefill_chunk = int(updates["prefill_chunk"])
         if "spec_decode" in updates:
             self.spec_decode = bool(updates["spec_decode"])
+        if "spec_len" in updates:
+            # hot draft-length change: mid-stream safety comes from the
+            # existing guards (_tick_len headroom cap, _plan_tick overrun
+            # skip); a value the cache can't host simply shrinks the tick
+            self.spec_len = max(int(updates["spec_len"]), 0)
+        if "compact_frac" in updates:
+            self.compact_frac = min(max(
+                float(updates["compact_frac"]), 0.0), 1.0)
+        if "class_weights" in updates:
+            # per-class weight retune ({name: weight}): arbitration-only
+            # state, so a frozen-dataclass replace at the tick boundary is
+            # the whole swap — aging bounds (max_defer) are NOT tunable,
+            # they are the starvation guarantee
+            for name, w in dict(updates["class_weights"]).items():
+                assert name in self.classes, \
+                    f"class_weights names unknown class {name!r}"
+                self.classes[name] = dataclasses.replace(
+                    self.classes[name], weight=float(w))
+        if "autotune" in updates:
+            on = updates["autotune"]
+            if on and self.autotuner is None:
+                from repro.engine.autotune import AutoTuner
+                kw = dict(on) if isinstance(on, dict) else {}
+                self.autotuner = AutoTuner(self, **kw)
+            elif not on:
+                self.autotuner = None
         if "compact_decode" in updates:
             v = updates["compact_decode"]
             self.compact_decode = None if v is None else bool(v)
@@ -1373,7 +1433,7 @@ class ServeEngine:
         participant is greedy: verifying sampled continuations greedily
         would change their distribution (module docstring)."""
         dec = [r for r in act if not r.prefilling]
-        return (self.spec_decode and self.cfg.serve.spec_len > 1
+        return (self.spec_decode and self.spec_len > 1
                 and bool(dec) and all(r.temperature <= 0 for r in dec))
 
     def _pool_spec_arms(self, act: List[Request]) -> tuple:
@@ -1421,7 +1481,7 @@ class ServeEngine:
                 cands.append(TickCandidate(
                     sp.pool_id, "decode", n_dec=len(dec), n_pre=len(pre),
                     chunk=self.decode_chunk, weight=weight(dec),
-                    spec_len=self.cfg.serve.spec_len if arms else 0,
+                    spec_len=self.spec_len if arms else 0,
                     arms=arms, load=load, xfer=xfer))
             if pre:
                 overdue = max(r.deferred - self.classes[r.priority].max_defer
@@ -1459,7 +1519,7 @@ class ServeEngine:
         — launching the jit without blocking, so a scheduling round can
         co-dispatch plans for several device-placed pools (the parallel
         group-tick path) before waiting on any of them."""
-        spec_len = self.cfg.serve.spec_len
+        spec_len = self.spec_len
         if mode == "spec":
             # bare-"spec" back-compat (old monkeypatched deciders): map to
             # the strongest proposer this engine carries
@@ -1508,7 +1568,8 @@ class ServeEngine:
         # layout arm: inside the half-idle eligibility gate, compact-vs-full
         # is either pinned by the config override or chosen per tick by the
         # engine from measured per-pool layout EMAs (Engine.choose_compact)
-        compact_ok = mode != "prefill" and len(part) <= sp.slots // 2
+        compact_ok = mode != "prefill" \
+            and len(part) <= int(sp.slots * self.compact_frac)
         compact = compact_ok and (
             self.compact_decode if self.compact_decode is not None
             else self.engine.choose_compact(sp.pool_id))
@@ -1712,7 +1773,7 @@ class ServeEngine:
             return False
         self._drain_step()
         self._admit()
-        spec_len = self.cfg.serve.spec_len
+        spec_len = self.spec_len
         if self.single_pool:
             sp = self.pools[0]
             act = [r for r in sp.active if r is not None]
@@ -1769,6 +1830,10 @@ class ServeEngine:
         self.tokens_out += n_new
         self._check_breakpoints(n_new)
         self.tick_no += 1
+        if self.autotuner is not None:
+            # meta-control at the tick boundary, work ticks only: idle
+            # ticks return above, so windows never accumulate empty time
+            self.autotuner.on_tick()
         return True
 
     # ----------------------------------------------------------- convenience

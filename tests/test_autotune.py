@@ -1,0 +1,274 @@
+"""Unit tests for the knob meta-controller (engine.autotune).
+
+Three layers: deterministic convergence with a SYNTHETIC cost function
+(the control loop proven without wall-clock noise), the Engine.choose_knob
+decision discipline itself (bootstrap coverage, exploitation, re-explore
+rotation), and the load-bearing invariant — an engine tuning its own knobs
+mid-stream stays bit-identical to the static greedy oracle.
+"""
+from functools import lru_cache
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_arch
+from repro.engine import jobs as J
+from repro.engine.autotune import AutoTuner, Knob, default_knobs
+from repro.engine.engine import Engine
+from repro.engine.serve import ServeEngine
+from repro.models import lm
+from repro.runtime.serve import BatchedServer
+
+from conftest import PYTEST_SEED
+
+CFG = get_arch("gemma3-1b-smoke")
+MAX_LEN = 64
+
+
+@lru_cache(maxsize=None)
+def _fixture():
+    params = lm.init(CFG, jax.random.PRNGKey(0))
+    return params, BatchedServer(CFG, params, max_len=MAX_LEN)
+
+
+def _engine(**kw):
+    params, _ = _fixture()
+    return ServeEngine(CFG, params, max_len=MAX_LEN, **kw)
+
+
+def _synthetic_tuner(eng, costmap, name="prefill_chunk", window=1,
+                     key="prefill_chunk"):
+    """Tuner whose window cost is a pure function of the live knob value —
+    no wall clock, no tokens, fully deterministic."""
+    knob = Knob(name, tuple(sorted(costmap)), key=key)
+    tuner = AutoTuner(eng, knobs=[knob], window=window, warmup=0,
+                      measure=lambda stats: costmap[getattr(eng, key)])
+    eng.autotuner = tuner
+    return tuner
+
+
+# ------------------------------------------------------------ choose_knob
+
+def test_choose_knob_bootstrap_covers_every_arm():
+    e = Engine()
+    values = (1, 2, 4, 8)
+    seen = []
+    for v in values:
+        got = e.choose_knob("k", values)
+        seen.append(got)
+        assert isinstance(got, int), "bootstrap must return the TYPED arm"
+        e.costs.observe(J.knob_kind("k", got), float(10 - got))
+    assert seen == list(values), \
+        "bootstrap visits every unmeasured arm in listed order"
+    assert e.choose_knob("k", values) == 8, "then exploits the cheapest"
+
+
+def test_choose_knob_reexplores_losers():
+    e = Engine()
+    values = (1, 2)
+    e.costs.observe(J.knob_kind("k", 1), 5.0)
+    e.costs.observe(J.knob_kind("k", 2), 1.0)
+    picks = [e.choose_knob("k", values) for _ in range(32)]
+    assert picks.count(1) == 2, "the loser re-explores every 16th round"
+    assert all(p == 2 for i, p in enumerate(picks) if (i + 1) % 16 != 0)
+    deq = [d for d in e.decisions if d["decision"] == "autotune_knob"]
+    assert any(d.get("why") == "re-explore" for d in deq)
+    assert all("scores" in d for d in deq if "why" not in d)
+
+
+def test_knob_kind_distinct_arms():
+    assert J.knob_kind("spec_len", 4) != J.knob_kind("spec_len", 8)
+    assert J.knob_kind("a", 1) != J.knob_kind("b", 1)
+
+
+# --------------------------------------------------- synthetic convergence
+
+def test_forced_bad_chunk_recovers():
+    eng = _engine(slots=2, prefill_chunk=16, decode_chunk=2)
+    tuner = _synthetic_tuner(eng, {1: 5.0, 4: 2.0, 16: 1.0})
+    eng._apply_updates({"prefill_chunk": 1})
+    tuner.current["prefill_chunk"] = 1
+    for _ in range(10):
+        tuner.on_tick()
+    assert tuner.current["prefill_chunk"] == 16, \
+        f"did not recover within 10 windows: {tuner.snapshot()}"
+    assert eng.prefill_chunk == 16
+
+
+def test_forced_bad_spec_len_recovers():
+    eng = _engine(slots=2, prefill_chunk=8, decode_chunk=2,
+                  spec_decode=True)
+    costmap = {2: 3.0, 4: 1.0, 8: 2.0}
+    knob = Knob("spec_len", (2, 4, 8), key="spec_len")
+    tuner = AutoTuner(eng, knobs=[knob], window=1, warmup=0,
+                      measure=lambda s: costmap[eng.spec_len])
+    eng.autotuner = tuner
+    eng._apply_updates({"spec_len": 8})
+    tuner.current["spec_len"] = 8
+    for _ in range(10):
+        tuner.on_tick()
+    assert tuner.current["spec_len"] == 4 and eng.spec_len == 4
+
+
+def test_warmup_windows_discarded():
+    """The first window after an arm switch must not enter the EMA — it
+    carries the fresh jit specialization in real serving."""
+    eng = _engine(slots=2, prefill_chunk=16, decode_chunk=2)
+    calls = []
+
+    def measure(stats):
+        calls.append(eng.prefill_chunk)
+        return 1.0
+
+    knob = Knob("prefill_chunk", (1, 16), key="prefill_chunk")
+    tuner = AutoTuner(eng, knobs=[knob], window=1, warmup=1,
+                      measure=measure)
+    eng.autotuner = tuner
+    tuner.on_tick()                      # measures settled 16, moves to 1
+    assert eng.prefill_chunk == 1
+    n = len(calls)
+    tuner.on_tick()                      # warm-up under 1: NOT measured
+    assert len(calls) == n
+    tuner.on_tick()                      # settled 1: measured
+    assert len(calls) == n + 1 and calls[-1] == 1
+
+
+def test_round_robin_coordinate_descent():
+    """Two knobs: windows alternate ownership, each converges on its own
+    optimum (the cost function is separable on purpose)."""
+    eng = _engine(slots=2, prefill_chunk=16, decode_chunk=2)
+    cost = lambda s: ({1: 3.0, 16: 1.0}[eng.prefill_chunk]
+                      + {0.25: 0.5, 0.75: 0.0}[eng.compact_frac])
+    tuner = AutoTuner(
+        eng, knobs=[Knob("prefill_chunk", (1, 16), key="prefill_chunk"),
+                    Knob("compact_frac", (0.25, 0.75),
+                         key="compact_frac")],
+        window=1, warmup=0, measure=cost)
+    eng.autotuner = tuner
+    eng._apply_updates({"prefill_chunk": 1, "compact_frac": 0.25})
+    tuner.current.update({"prefill_chunk": 1, "compact_frac": 0.25})
+    for _ in range(14):
+        tuner.on_tick()
+    assert tuner.current == {"prefill_chunk": 16, "compact_frac": 0.75}
+
+
+def test_starved_window_dropped_not_scored():
+    """A window that committed zero tokens has no signal: the default
+    measure returns None and no EMA is written."""
+    eng = _engine(slots=2, prefill_chunk=16, decode_chunk=2)
+    tuner = AutoTuner(eng, knobs=[Knob("prefill_chunk", (1, 16),
+                                       key="prefill_chunk")],
+                      window=1, warmup=0)
+    assert tuner._measure_wall({"wall_s": 1.0, "tokens": 0.0,
+                                "ticks": 4.0}) is None
+    assert tuner._measure_wall({"wall_s": 1.0, "tokens": 4.0,
+                                "ticks": 4.0}) == 0.25
+
+
+# ------------------------------------------------------------ knob plumbing
+
+def test_update_handlers_clamp_and_apply():
+    eng = _engine(slots=2, prefill_chunk=8, decode_chunk=2)
+    eng._apply_updates({"spec_len": 6})
+    assert eng.spec_len == 6
+    eng._apply_updates({"spec_len": -3})
+    assert eng.spec_len == 0
+    eng._apply_updates({"compact_frac": 1.7})
+    assert eng.compact_frac == 1.0
+    eng._apply_updates({"compact_frac": -0.5})
+    assert eng.compact_frac == 0.0
+    eng._apply_updates({"class_weights": {"default": 9.0}})
+    assert eng.classes["default"].weight == 9.0
+    with pytest.raises(AssertionError):
+        eng._apply_updates({"class_weights": {"nope": 1.0}})
+
+
+def test_autotune_hot_toggle_via_update():
+    eng = _engine(slots=2, prefill_chunk=8, decode_chunk=2)
+    assert eng.autotuner is None
+    eng._apply_updates({"autotune": {"window": 2, "warmup": 0}})
+    assert eng.autotuner is not None and eng.autotuner.window == 2
+    assert eng._inspect("all")["autotune"]["enabled"]
+    eng._apply_updates({"autotune": False})
+    assert eng.autotuner is None
+    assert eng._inspect("all")["autotune"] == {"enabled": False}
+
+
+def test_default_knobs_shape():
+    eng = _engine(slots=2, prefill_chunk=8, decode_chunk=2,
+                  spec_decode=True)
+    knobs = {k.name: k for k in default_knobs(eng)}
+    assert "prefill_chunk" in knobs and "compact_frac" in knobs
+    assert all(v <= 8 for v in knobs["prefill_chunk"].values), \
+        "chunk arms must not exceed the configured chunk (admission)"
+    assert "spec_len" in knobs
+    # single default class: no weight knob to trade off
+    assert not any(n.startswith("weight:") for n in knobs)
+
+
+def test_class_weight_knob_wrap():
+    import dataclasses as dc
+    from repro.configs.base import PriorityClass
+    cfg = dc.replace(CFG, serve=dc.replace(
+        CFG.serve, classes=(PriorityClass("a", 1.0, 4),
+                            PriorityClass("b", 2.0, 8))))
+    params, _ = _fixture()
+    eng = ServeEngine(cfg, params, max_len=MAX_LEN, slots=2,
+                      prefill_chunk=8, decode_chunk=2)
+    knobs = {k.name: k for k in default_knobs(eng)}
+    kb = knobs["weight:b"]
+    assert kb.current(eng) == 2.0
+    eng._apply_updates(kb.updates(4.0))
+    assert eng.classes["b"].weight == 4.0 and kb.current(eng) == 4.0
+    assert eng.classes["b"].max_defer == 8, \
+        "weight retune must not touch the aging bound"
+
+
+# ------------------------------------------- bit-identicality under tuning
+
+_ORACLE = {}
+
+
+def oracle(prompt, max_new):
+    key = (tuple(int(t) for t in prompt), int(max_new))
+    if key not in _ORACLE:
+        _, srv = _fixture()
+        _ORACLE[key] = srv.generate_static(
+            np.asarray(prompt, np.int32)[None], max_new=int(max_new))[0]
+    return _ORACLE[key]
+
+
+def test_tuning_preserves_greedy_bit_identicality():
+    """An engine aggressively tuning spec_len + prefill_chunk +
+    compact_frac every 2 work ticks (warmup=0: compile windows allowed
+    into the EMA — worst case for churn) must produce outputs bit-equal
+    to the static oracle.  This is the invariant that licenses autotuning
+    in production serving."""
+    params, _ = _fixture()
+    eng = ServeEngine(CFG, params, max_len=MAX_LEN, slots=3,
+                      prefill_chunk=8, decode_chunk=2, spec_decode=True,
+                      autotune={"window": 2, "warmup": 0,
+                                "knobs": [
+                                    Knob("spec_len", (2, 4, 8),
+                                         key="spec_len"),
+                                    Knob("prefill_chunk", (1, 4, 8),
+                                         key="prefill_chunk"),
+                                    Knob("compact_frac", (0.25, 0.5, 0.75),
+                                         key="compact_frac")]})
+    rng = np.random.default_rng(PYTEST_SEED + 4242)
+    prompts = [rng.integers(1, CFG.vocab, (int(rng.integers(2, 13)),))
+               .astype(np.int32) for _ in range(7)]
+    max_news = [int(rng.integers(1, 9)) for _ in prompts]
+    reqs = [eng.submit(p, max_new=n) for p, n in zip(prompts, max_news)]
+    ticks = 0
+    while eng.queue or any(r is not None for r in eng.active):
+        assert eng.tick() and ticks < 2000
+        ticks += 1
+    assert eng.autotuner.windows > 3, "tuner must actually have cycled"
+    assert eng.autotuner.moves >= 1
+    for p, n, r in zip(prompts, max_news, reqs):
+        np.testing.assert_array_equal(
+            r.output(), oracle(p, n),
+            err_msg=f"plen={len(p)} max_new={n} "
+                    f"tuner={eng.autotuner.snapshot()}")

@@ -35,6 +35,7 @@ import pytest
 
 from repro.configs import get_arch
 from repro.core import messages as M
+from repro.engine.loadgen import arrival_offsets
 from repro.engine.serve import ServeEngine
 from repro.models import lm
 from repro.runtime.serve import BatchedServer
@@ -128,6 +129,19 @@ def _gen_prompts(rng, n_req):
     return prompts
 
 
+def _gen_arrivals(rng, n_req):
+    """Draw a request-arrival pattern from the loadgen samplers (bounded
+    to a small tick window so scenarios still drain fast)."""
+    kind = str(rng.choice(["closed", "poisson", "bursty"]))
+    if kind == "closed":
+        return None
+    if kind == "poisson":
+        at = arrival_offsets("poisson", n_req, rng, rate=0.7)
+    else:
+        at = arrival_offsets("bursty", n_req, rng, burst=2, gap=3.0)
+    return [int(t) for t in np.minimum(at, 12)]
+
+
 def gen_scenario(rng):
     n_req = int(rng.integers(1, 6))
     return {
@@ -160,6 +174,11 @@ def gen_scenario(rng):
                      for t in rng.choice(7, size=int(rng.integers(0, 3)),
                                          replace=False)},
         "ctl_seed": int(rng.integers(0, 2**31)),
+        # loadgen-driven arrival axis: per-request submit offsets in ticks
+        # (None: the historical submit-everything-up-front scenario).
+        # Staggered joins hit admission/aging mid-stream instead of only
+        # at tick 0 — outputs must stay oracle-identical regardless.
+        "arrival": _gen_arrivals(rng, n_req),
     }
 
 
@@ -195,12 +214,17 @@ def run_scenario(sc):
                       prefix_cache=sc.get("prefix_cache", False),
                       placements=_placements(sc),
                       **_draft_kwargs(sc, params))
-    reqs = [eng.submit(p, max_new=n)
-            for p, n in zip(sc["prompts"], sc["max_news"])]
+    arrival = sc.get("arrival") or [0] * len(sc["prompts"])
+    # submit in arrival order; pending requests join at their offset tick
+    pend = sorted(range(len(sc["prompts"])), key=lambda i: arrival[i])
+    reqs: list = [None] * len(sc["prompts"])
     ctl_rng = np.random.default_rng(sc["ctl_seed"])
     drain_at = sc.get("drain_at")
     ticks = 0
-    while eng.queue or any(r is not None for r in eng.active):
+    while pend or eng.queue or any(r is not None for r in eng.active):
+        while pend and arrival[pend[0]] <= ticks:
+            i = pend.pop(0)
+            reqs[i] = eng.submit(sc["prompts"][i], max_new=sc["max_news"][i])
         if ticks in sc["schedule"]:
             _ctl_batch(eng, sc["schedule"][ticks], ctl_rng)
         if ticks == drain_at and len(eng.pools) > 1:
@@ -404,5 +428,10 @@ if HAVE_HYPOTHESIS:
                 label="schedule"),
             "ctl_seed": data.draw(st.integers(0, 2**31 - 1),
                                   label="ctl_seed"),
+            "arrival": data.draw(
+                st.one_of(st.none(),
+                          st.lists(st.integers(0, 12), min_size=n_req,
+                                   max_size=n_req)),
+                label="arrival"),
         }
         run_scenario(sc)
